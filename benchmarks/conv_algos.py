@@ -1,0 +1,57 @@
+"""Paper §V case study (Figures 9-25): the cuDNN convolution algorithms
+compared through the simulator.
+
+For each algorithm (GEMM / implicit-GEMM / Winograd / FFT) x direction
+(forward, backward-data+filter via grad), reports:
+
+* simulated time + dominant unit (the IPC-phases story, Figs. 15-21)
+* HBM channel-camping index (the DRAM bank-camping story, Figs. 9-14:
+  gather/scatter-heavy lowerings concentrate traffic)
+* MXU-tile occupancy proxy (replaces warp divergence, Figs. 22-25 — see
+  DESIGN.md §2 drop rationale)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Simulator
+from repro.models.conv_algos import CONV_FNS
+
+
+def run(emit):
+    sim = Simulator()
+    b, hw, cin, cout = 32, 28, 32, 64    # conv_sample-like layer
+    x_s = jax.ShapeDtypeStruct((b, hw, hw, cin), jnp.float32)
+    w_s = jax.ShapeDtypeStruct((3, 3, cin, cout), jnp.float32)
+
+    results = {}
+    for algo, fn in CONV_FNS.items():
+        # forward
+        cap = sim.capture(lambda x, w: fn(x, w, "SAME"), x_s, w_s,
+                          name=f"conv_fwd_{algo}")
+        rep = sim.performance(cap)
+        vr = sim.vision(rep, num_buckets=100)
+        emit(f"conv_fwd_{algo}", rep.total_seconds * 1e6,
+             f"dom={max(rep.unit_seconds, key=rep.unit_seconds.get)};"
+             f"camping={vr.camping_index:.2f};phases={len(vr.phases)}")
+        # backward (data+filter): grad wrt both inputs
+        cap_b = sim.capture(
+            lambda x, w: jax.grad(lambda xx, ww: jnp.sum(fn(xx, ww, "SAME")),
+                                  argnums=(0, 1))(x, w),
+            x_s, w_s, name=f"conv_bwd_{algo}")
+        rep_b = sim.performance(cap_b)
+        vr_b = sim.vision(rep_b, num_buckets=100)
+        emit(f"conv_bwd_{algo}", rep_b.total_seconds * 1e6,
+             f"dom={max(rep_b.unit_seconds, key=rep_b.unit_seconds.get)};"
+             f"camping={vr_b.camping_index:.2f}")
+        results[algo] = (rep, vr)
+
+    # headline comparison (paper: Winograd-nonfused fastest/highest IPC)
+    fastest = min(results, key=lambda a: results[a][0].total_seconds)
+    emit("conv_fastest_algo", results[fastest][0].total_seconds * 1e6, fastest)
+    return results
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

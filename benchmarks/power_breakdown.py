@@ -1,0 +1,51 @@
+"""Paper Fig. 8 (§IV-A): average power broken into components.
+
+The paper found MNIST at 65% core + 25% idle on a GTX1080Ti model.  We report
+the TPU-component shares for (a) LeNet (the paper's workload — tiny, so
+static/idle dominates a 197-TFLOP chip) and (b) a transformer train step
+(compute-dominated), which reproduces the paper's contrast between
+compute-heavy and under-utilizing phases.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import config as C
+from repro.core import Simulator
+from repro.models import build_model
+from benchmarks.correlation import _abstract, lenet_capture
+
+
+def transformer_capture(sim: Simulator):
+    cfg = C.get("llama3-8b").smoke.replace(num_layers=4, d_model=256,
+                                           num_heads=8, num_kv_heads=4,
+                                           head_dim=32, d_ff=1024)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = {"tokens": jnp.zeros((8, 128), jnp.int32),
+             "labels": jnp.zeros((8, 128), jnp.int32)}
+
+    def train_step(params, batch):
+        loss, grads = jax.value_and_grad(lambda p: model.loss(p, batch)[0])(params)
+        return jax.tree.map(lambda p, g: p - 1e-3 * g, params, grads), loss
+
+    return sim.capture(train_step, _abstract(params), _abstract(batch),
+                       name="llama_mini")
+
+
+def run(emit):
+    sim = Simulator()
+    for name, cap in [("lenet", lenet_capture(sim)[0]),
+                      ("llama_mini", transformer_capture(sim))]:
+        rep = sim.performance(cap)
+        pw = sim.power(rep)
+        for comp, share in sorted(pw.shares.items(), key=lambda kv: -kv[1]):
+            emit(f"power_{name}_{comp.replace('/', '_')}",
+                 pw.energy_j[comp] * 1e6, f"{share*100:.1f}%")
+        emit(f"power_{name}_avg_watts", 0, f"{pw.avg_watts:.1f}")
+    return pw
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

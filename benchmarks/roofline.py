@@ -1,0 +1,191 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, derives the three roofline terms from the
+compiled artifact (per-chip quantities — the SPMD partitioner already divided
+shapes by 256/512):
+
+    compute term    = IR mxu+vpu FLOPs / peak
+    memory term     = IR HBM bytes / HBM bw
+    collective term = ICI link traffic / (links_per_axis * link_bw)
+
+plus MODEL_FLOPS = 6*N*D (train) or 2*N_active*D (inference) per chip, the
+useful-compute ratio MODEL_FLOPS/HLO_FLOPs (remat/redundancy waste), the
+dominant bottleneck, and a one-line mitigation note.  Also reports the
+engine's overlapped makespan and its roofline fraction
+(= max(terms)/makespan-ish achieved fraction).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro import config as C
+from repro.core.hw import V5E
+from repro.models import param_count
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+HW = V5E
+LINK_BW = HW.ici_links_per_axis * HW.ici_link_bw   # 100 GB/s per chip per axis
+
+
+def model_flops_per_chip(arch: str, shape_name: str, num_devices: int) -> float:
+    """Analytic useful FLOPs (the 6ND convention; attention excluded)."""
+    entry = C.get(arch)
+    cfg = entry.full
+    shape = C.SHAPES_BY_NAME[shape_name]
+    n_active = param_count(cfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        text = shape.seq_len
+        total = 2.0 * n_active * shape.global_batch * text
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / num_devices
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    accum: int
+    per_dev_gib: float
+    compile_s: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    engine_total_s: float
+    engine_mfu: float
+    exposed_ici_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the simulated makespan is to the binding roofline term
+        (1.0 = running exactly at the dominant hardware limit)."""
+        if self.engine_total_s <= 0:
+            return 0.0
+        return self.roofline_bound_s / self.engine_total_s
+
+    @property
+    def model_mfu(self) -> float:
+        """Useful-FLOPs MFU at the simulated makespan — the score that counts
+        remat/overhead as waste."""
+        if self.engine_total_s <= 0:
+            return 0.0
+        return self.model_flops / (self.engine_total_s * HW.peak_bf16_flops)
+
+    def mitigation(self) -> str:
+        d = self.dominant
+        if d == "compute":
+            if self.useful_ratio < 0.6:
+                return ("compute-bound but only "
+                        f"{self.useful_ratio*100:.0f}% useful: relax remat "
+                        "policy / fuse attention to cut recompute")
+            return "compute-bound: increase per-chip arithmetic intensity (larger microbatch) or quantize"
+        if d == "memory":
+            return ("memory-bound: fuse attention (flash kernel), widen "
+                    "fusion boundaries, cut fp32 intermediates")
+        return ("collective-bound: reshard to shrink the all-gather/all-reduce "
+                "payloads or overlap with async collectives")
+
+
+def load_cells(mesh_filter: Optional[str] = None) -> List[Cell]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, "*.json"))):
+        d = json.load(open(path))
+        if "skipped" in d or "ir_totals" not in d:
+            continue
+        if mesh_filter and d["mesh"] != mesh_filter:
+            continue
+        ir = d["ir_totals"]
+        eng = d.get("engine", {})
+        hlo_flops = ir["mxu_flops"] + ir["vpu_flops"] + ir["trans_flops"]
+        cells.append(Cell(
+            arch=d["arch"], shape=d["shape"], mesh=d["mesh"], kind=d["kind"],
+            accum=d.get("accum_steps", 1),
+            per_dev_gib=d["memory"]["per_device_bytes"] / 2**30,
+            compile_s=d["compile_s"],
+            compute_s=ir["mxu_flops"] / HW.peak_bf16_flops
+                      + ir["vpu_flops"] / HW.vpu_flops
+                      + ir["trans_flops"] / HW.transcendental_flops,
+            memory_s=ir["hbm_bytes"] / HW.hbm_bw,
+            collective_s=eng.get("total_ici_bytes",
+                                 ir["collective_bytes"]) / LINK_BW,
+            model_flops=model_flops_per_chip(d["arch"], d["shape"],
+                                             d["num_devices"]),
+            hlo_flops=hlo_flops,
+            engine_total_s=eng.get("total_seconds", 0.0),
+            engine_mfu=eng.get("mfu", 0.0),
+            exposed_ici_s=eng.get("exposed_ici_seconds", 0.0),
+        ))
+    return cells
+
+
+def markdown_table(cells: List[Cell]) -> str:
+    hdr = ("| arch | shape | mesh | HBM GiB/chip | compute s | memory s | "
+           "collective s | dominant | useful % | sim total s | model-MFU % | "
+           "roofline frac |")
+    sep = "|" + "---|" * 12
+    rows = [hdr, sep]
+    for c in sorted(cells, key=lambda c: (c.arch, c.shape, c.mesh)):
+        rows.append(
+            f"| {c.arch} | {c.shape} | {c.mesh} | {c.per_dev_gib:.2f} | "
+            f"{c.compute_s:.3e} | {c.memory_s:.3e} | {c.collective_s:.3e} | "
+            f"**{c.dominant}** | {c.useful_ratio*100:.0f}% | "
+            f"{c.engine_total_s:.3e} | {c.model_mfu*100:.1f}% | "
+            f"{c.roofline_fraction:.2f} |")
+    return "\n".join(rows)
+
+
+def csv_rows(cells: List[Cell]) -> str:
+    rows = ["arch,shape,mesh,per_dev_gib,compute_s,memory_s,collective_s,"
+            "dominant,useful_ratio,sim_total_s,model_mfu,roofline_fraction,"
+            "mitigation"]
+    for c in cells:
+        rows.append(f"{c.arch},{c.shape},{c.mesh},{c.per_dev_gib:.3f},"
+                    f"{c.compute_s:.4e},{c.memory_s:.4e},{c.collective_s:.4e},"
+                    f"{c.dominant},{c.useful_ratio:.3f},{c.engine_total_s:.4e},"
+                    f"{c.model_mfu:.4f},{c.roofline_fraction:.3f},"
+                    f"\"{c.mitigation()}\"")
+    return "\n".join(rows)
+
+
+def main():
+    cells = load_cells()
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "experiments")
+    with open(os.path.join(out_dir, "roofline.md"), "w") as f:
+        f.write("# Roofline baselines (per chip, TPU v5e constants)\n\n")
+        f.write(markdown_table([c for c in cells if c.mesh == "16x16"]))
+        f.write("\n\n## Multi-pod (2x16x16)\n\n")
+        f.write(markdown_table([c for c in cells if c.mesh == "2x16x16"]))
+    with open(os.path.join(out_dir, "roofline.csv"), "w") as f:
+        f.write(csv_rows(cells))
+    print(markdown_table([c for c in cells if c.mesh == "16x16"]))
+    print(f"\n{len(cells)} cells -> experiments/roofline.md,.csv")
+
+
+if __name__ == "__main__":
+    main()

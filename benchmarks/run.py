@@ -1,0 +1,58 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Sections:
+
+  correlation      — Fig. 6/7 per-kernel sim-vs-reference correlation (LeNet)
+  power            — Fig. 8 component power breakdown
+  conv_algos       — §V cuDNN-algorithm case study (camping/phases/IPC)
+  checkpointing    — §III-F fidelity-switching checkpoint flow
+  kernels          — Pallas kernel micro-benchmarks + modeled v5e times
+  roofline         — §Roofline table from the dry-run artifacts (if present)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def main() -> None:
+    from benchmarks import (checkpointing, conv_algos, correlation,
+                            kernels_bench, power_breakdown)
+    sections = [
+        ("correlation", correlation.run),
+        ("power", power_breakdown.run),
+        ("conv_algos", conv_algos.run),
+        ("checkpointing", checkpointing.run),
+        ("kernels", kernels_bench.run),
+    ]
+    failures = []
+    for name, fn in sections:
+        print(f"# --- {name} ---")
+        try:
+            fn(emit)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    print("# --- roofline ---")
+    try:
+        from benchmarks import roofline
+        cells = roofline.load_cells(mesh_filter="16x16")
+        for c in sorted(cells, key=lambda c: (c.arch, c.shape))[:64]:
+            emit(f"roofline_{c.arch}_{c.shape}", c.engine_total_s * 1e6,
+                 f"dom={c.dominant};model_mfu={c.model_mfu*100:.1f}%;"
+                 f"frac={c.roofline_fraction:.2f}")
+    except Exception:
+        traceback.print_exc()
+        failures.append("roofline")
+    if failures:
+        print(f"# FAILED sections: {failures}")
+        sys.exit(1)
+    print("# all benchmark sections OK")
+
+
+if __name__ == "__main__":
+    main()

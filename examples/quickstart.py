@@ -1,0 +1,50 @@
+"""Quickstart: train a small LM, then replay the exact training step through
+the paper's simulator — functional mode, performance mode, AerialVision-style
+phase analysis, and the power breakdown.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro import config as C
+from repro.core import Simulator
+from repro.runtime.trainer import Trainer
+from repro.runtime.steps import train_bundle
+
+
+def main():
+    entry = C.get("llama3-8b")
+    shape = C.ShapeConfig("quickstart", seq_len=64, global_batch=4, kind="train")
+    rc = C.RunConfig(model=entry.smoke, shape=shape, mesh=C.SMOKE_MESH,
+                     train=C.TrainConfig(total_steps=10, warmup_steps=2,
+                                         checkpoint_every=5,
+                                         checkpoint_dir="/tmp/repro_quickstart"))
+
+    print("== 1. train 10 steps (functional mode: the real workload) ==")
+    trainer = Trainer(rc, use_mesh=False)
+    report = trainer.train()
+    print(f"loss: {report.losses[0]:.3f} -> {report.losses[-1]:.3f}  "
+          f"checkpoints={report.checkpoints}")
+
+    print("== 2. capture the compiled step (the paper's PTX-extraction analogue) ==")
+    sim = Simulator()
+    cap = sim.capture_bundle(train_bundle(rc), name="quickstart_step")
+    print(f"HLO: {cap.hlo_text_len/1e3:.0f} KB, "
+          f"IR ops: {int(cap.module.totals()['ops'])} (trip-count scaled)")
+
+    print("== 3. performance-simulate on TPU v5e ==")
+    rep = sim.performance(cap)
+    print(f"modeled step time: {rep.total_seconds*1e3:.3f} ms, "
+          f"MFU {rep.mfu*100:.1f}%, HBM util {rep.hbm_utilization*100:.0f}%")
+
+    print("== 4. AerialVision-style utilization timeline ==")
+    vr = sim.vision(rep)
+    print(vr.ascii_heatmap())
+    print(f"phases: {[(f'{t0*1e3:.2f}ms', u) for t0, _, u in vr.phases[:6]]}")
+
+    print("== 5. power breakdown (GPUWattch analogue) ==")
+    print(sim.power(rep).table())
+
+
+if __name__ == "__main__":
+    main()

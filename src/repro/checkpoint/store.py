@@ -1,0 +1,162 @@
+"""Checkpoint store: atomic, async, mesh-independent restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000100/
+        manifest.json     # treedef paths, shapes, dtypes, step metadata
+        arrays.npz        # one entry per leaf (gathered to host)
+    <dir>/step_000100.COMMITTED   # commit marker -> crash-safe
+
+Restore takes *target* shardings, so a checkpoint written on a 2x16x16 mesh
+restores onto a 16x16 (or 4-device, or 1-device) mesh — this is the elastic
+rescale path.  The paper analogue (§III-F): training state checkpointing is
+the "global memory" snapshot; the simulator's op-window checkpoint lives in
+``repro.core.sim_checkpoint`` and composes with this store.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+import uuid
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree: Any) -> List[str]:
+    paths_and_leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(p) for p, _ in paths_and_leaves]
+
+
+def save(directory: str, step: int, tree: Any, blocking: bool = True,
+         extra_meta: Optional[Dict] = None) -> threading.Thread:
+    """Write a checkpoint; returns the writer thread (join if blocking=False)."""
+    os.makedirs(directory, exist_ok=True)
+    # snapshot to host memory synchronously (cheap vs. training step);
+    # disk I/O can then proceed async without racing the donated buffers
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+    paths = _leaf_paths(tree)
+
+    def _write():
+        name = f"step_{step:08d}"
+        tmp = os.path.join(directory, f".tmp_{name}_{uuid.uuid4().hex[:8]}")
+        final = os.path.join(directory, name)
+        os.makedirs(tmp, exist_ok=True)
+        arrays = {f"leaf_{i}": l for i, l in enumerate(host_leaves)}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "paths": paths,
+            "shapes": [list(l.shape) for l in host_leaves],
+            "dtypes": [str(l.dtype) for l in host_leaves],
+            "time": time.time(),
+            "extra": extra_meta or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final, ignore_errors=True)
+        try:
+            os.rename(tmp, final)
+        except OSError:
+            shutil.rmtree(tmp, ignore_errors=True)   # concurrent same-step save won
+        open(final + ".COMMITTED", "w").close()
+
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    if blocking:
+        t.join()
+    return t
+
+
+def list_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and os.path.exists(
+                os.path.join(directory, name + ".COMMITTED")):
+            steps.append(int(name.split("_")[1]))
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: int, like: Any) -> Any:
+    """Restore to host numpy arrays with the structure of ``like``."""
+    import ml_dtypes
+    name = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(name, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(name, "arrays.npz"))
+    leaves = []
+    for i, dt in enumerate(manifest["dtypes"]):
+        arr = data[f"leaf_{i}"]
+        if arr.dtype.kind == "V":   # npz stores bf16/f8 as raw void bytes
+            arr = arr.view(np.dtype(getattr(ml_dtypes, dt)))
+        leaves.append(arr)
+    _, treedef = jax.tree_util.tree_flatten(like)
+    if treedef.num_leaves != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, target tree expects "
+            f"{treedef.num_leaves} — structure changed since save")
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_resharded(directory: str, step: int, like: Any,
+                      shardings: Any) -> Any:
+    """Restore onto a (possibly different) mesh: the elastic-rescale path."""
+    host_tree = restore(directory, step, like)
+    target = jax.tree_util.tree_leaves(shardings)
+    leaves = jax.tree_util.tree_leaves(host_tree)
+    likes = jax.tree_util.tree_leaves(like)
+    out = [jax.device_put(np.asarray(l).astype(lk.dtype), s)
+           for l, s, lk in zip(leaves, target, likes)]
+    _, treedef = jax.tree_util.tree_flatten(like)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Cadenced async checkpointing with retention, for the trainer loop."""
+
+    def __init__(self, directory: str, every: int = 100, keep: int = 3,
+                 async_write: bool = True):
+        self.directory = directory
+        self.every = every
+        self.keep = keep
+        self.async_write = async_write
+        self._pending: List[threading.Thread] = []
+
+    def maybe_save(self, step: int, tree: Any, force: bool = False) -> bool:
+        if not force and (self.every <= 0 or step % self.every != 0):
+            return False
+        t = save(self.directory, step, tree, blocking=not self.async_write)
+        if self.async_write:
+            self._pending.append(t)
+        else:
+            self._gc()
+        return True
+
+    def wait(self):
+        for t in self._pending:
+            t.join()
+        self._pending.clear()
+        self._gc()   # retention enforced once all async writes committed
+
+    def _gc(self):
+        steps = list_steps(self.directory)
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            name = os.path.join(self.directory, f"step_{s:08d}")
+            shutil.rmtree(name, ignore_errors=True)
+            try:
+                os.remove(name + ".COMMITTED")
+            except OSError:
+                pass

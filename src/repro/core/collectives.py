@@ -1,0 +1,55 @@
+"""ICI collective timing model.
+
+Ring algorithms on a 2D torus (one ring per mesh axis, bidirectional links):
+
+    all-gather      g devices, S bytes output: (g-1)/g * S over the ring
+    reduce-scatter  same traffic as AG (input traverses once)
+    all-reduce      RS + AG = 2(g-1)/g * S
+    all-to-all      (g-1)/g * S (each device keeps 1/g)
+    collective-permute  S bytes point-to-point (one hop)
+
+Effective per-device ring bandwidth = links_per_axis * link_bw (both
+directions used).  A latency term (hops * per-hop latency) models small
+transfers; the paper's DRAM-bank analysis maps here to *link camping*: a
+collective whose group spans one mesh axis uses only that axis' links.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.core.hw import HardwareSpec
+
+
+@dataclass
+class CollectiveTime:
+    seconds: float
+    link_bytes: float       # bytes that traverse ICI per device
+    axis_guess: str         # which mesh axis (ring) is used
+
+
+def collective_time(kind: str, payload_bytes: float, group: int,
+                    hw: HardwareSpec, inter_pod: bool = False) -> CollectiveTime:
+    """payload_bytes = size of the (full) tensor at the op's output/input."""
+    if group <= 1:
+        return CollectiveTime(0.0, 0.0, "none")
+    bw = hw.ici_links_per_axis * hw.ici_link_bw
+    if inter_pod:
+        bw = hw.dcn_bw
+    g = group
+    if kind == "all-reduce":
+        traffic = 2.0 * (g - 1) / g * payload_bytes
+        hops = 2 * (g - 1)
+    elif kind in ("all-gather", "reduce-scatter", "all-to-all",
+                  "ragged-all-to-all", "collective-broadcast"):
+        traffic = (g - 1) / g * payload_bytes
+        hops = g - 1
+    elif kind == "collective-permute":
+        traffic = float(payload_bytes)
+        hops = 1
+    else:
+        traffic = float(payload_bytes)
+        hops = g - 1
+    t = traffic / bw + hops * hw.ici_latency_s
+    axis = "pod" if inter_pod else ("model" if g <= 16 else "data")
+    return CollectiveTime(t, traffic, axis)

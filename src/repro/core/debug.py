@@ -1,0 +1,194 @@
+"""Differential functional-simulation debugger (paper §III-D, Figures 2-3).
+
+The paper localizes functional bugs in three steps: failing cuDNN API call ->
+failing kernel within it -> first incorrectly-executed instruction (by
+instrumenting the PTX to log every register write and diffing sim vs GPU).
+
+TPU/JAX adaptation — the "instruction with logged register writes" becomes a
+jaxpr equation with logged outputs, and the oracle is the same equation
+evaluated in float64 (or a user-supplied alternative implementation):
+
+  level 1  compare end outputs of two callables            (API-call level)
+  level 2  walk the jaxpr, interpret each equation in both the test and
+           oracle environments, flag the FIRST divergent equation
+           (kernel -> instruction level)
+  level 3  recurse into the offending sub-jaxpr (pjit/remat/scan bodies)
+
+``first_divergence`` needs no hardware: it runs both environments on CPU,
+exactly how this repo's Pallas kernels are validated against ref.py oracles.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.extend import core as jcore
+from jax._src import source_info_util
+
+
+@dataclass
+class Divergence:
+    path: Tuple[str, ...]            # nesting of sub-jaxprs
+    eqn_index: int
+    primitive: str
+    max_abs_err: float
+    max_rel_err: float
+    out_shapes: List[Tuple]
+    source: str = ""
+
+    def __str__(self):
+        loc = " > ".join(self.path + (f"eqn[{self.eqn_index}] {self.primitive}",))
+        return (f"first divergence at {loc}: max_abs={self.max_abs_err:.3e} "
+                f"rel={self.max_rel_err:.3e} shapes={self.out_shapes} {self.source}")
+
+
+def _as_np(x):
+    return np.asarray(x, dtype=np.float64) if hasattr(x, "dtype") and \
+        np.issubdtype(np.asarray(x).dtype, np.floating) else np.asarray(x)
+
+
+def _err(a, b) -> Tuple[float, float]:
+    try:
+        an, bn = _as_np(a), _as_np(b)
+        if an.shape != bn.shape:
+            return float("inf"), float("inf")
+        if not np.issubdtype(an.dtype, np.floating):
+            return (0.0, 0.0) if np.array_equal(an, bn) else (float("inf"),) * 2
+        diff = np.abs(an - bn)
+        amax = float(np.max(diff)) if diff.size else 0.0
+        denom = float(np.max(np.abs(bn))) if bn.size else 1.0
+        return amax, amax / max(denom, 1e-30)
+    except Exception:
+        return float("inf"), float("inf")
+
+
+SUB_JAXPR_PARAMS = ("jaxpr", "call_jaxpr", "body_jaxpr", "cond_jaxpr",
+                    "branches")
+
+
+def first_divergence(fn: Callable, args: Sequence[Any], *,
+                     oracle: Optional[Callable[[Any], Any]] = None,
+                     rtol: float = 5e-2, atol: float = 1e-3,
+                     max_depth: int = 3,
+                     _path: Tuple[str, ...] = ()) -> Optional[Divergence]:
+    """Find the first jaxpr equation whose test-env output diverges from the
+    oracle-env output beyond (atol, rtol).
+
+    oracle: transforms inputs for the reference evaluation (default: cast all
+    floating inputs to float64 — the rounding-aware compare the paper's FP16
+    FMA analysis calls for).
+    """
+    closed = jax.make_jaxpr(fn)(*args)
+    flat_args = jax.tree.leaves(args)
+    return _walk_jaxpr(closed.jaxpr, closed.consts, flat_args, rtol=rtol,
+                       atol=atol, depth=max_depth, path=_path)
+
+
+def _cast64(x):
+    if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+        return jnp.asarray(x, jnp.float64)
+    return x
+
+
+def _cast_like(x, like):
+    if hasattr(like, "dtype") and hasattr(x, "dtype") and x.dtype != like.dtype:
+        return jnp.asarray(x, like.dtype)
+    return x
+
+
+def _walk_jaxpr(jaxpr, consts, args, *, rtol, atol, depth,
+                path) -> Optional[Divergence]:
+    env_t: Dict[Any, Any] = {}    # test env: native dtypes
+    env_o: Dict[Any, Any] = {}    # oracle env: float64
+
+    def read(env, var):
+        if isinstance(var, jcore.Literal):
+            return var.val
+        return env[var]
+
+    def write(env, var, val):
+        env[var] = val
+
+    with jax.enable_x64(True):
+        for var, const in zip(jaxpr.constvars, consts):
+            write(env_t, var, const)
+            write(env_o, var, _cast64(const))
+        for var, arg in zip(jaxpr.invars, args):
+            write(env_t, var, arg)
+            write(env_o, var, _cast64(arg))
+        for i, eqn in enumerate(jaxpr.eqns):
+            in_t = [read(env_t, v) for v in eqn.invars]
+            # oracle env: every floating input (incl. literals) goes to f64 —
+            # lax primitives demand exact dtype agreement, no promotion
+            in_o = [_cast64(read(env_o, v)) for v in eqn.invars]
+            try:
+                out_t = eqn.primitive.bind(*in_t, **eqn.params)
+            except Exception:
+                # primitives whose params embed dtypes: evaluate via eval_jaxpr
+                out_t = jcore.eval_jaxpr(
+                    jaxpr.replace(eqns=[eqn], invars=eqn.invars,
+                                  outvars=eqn.outvars, constvars=[]),
+                    [], *in_t)
+            try:
+                out_o = eqn.primitive.bind(*in_o, **eqn.params)
+            except Exception:
+                out_o = out_t   # oracle can't run this op: skip comparison
+            outs_t = out_t if eqn.primitive.multiple_results else [out_t]
+            outs_o = out_o if eqn.primitive.multiple_results else [out_o]
+            worst = (0.0, 0.0)
+            for a, b in zip(outs_t, outs_o):
+                ae, re_ = _err(a, b)
+                if ae > worst[0]:
+                    worst = (ae, re_)
+            if worst[0] > atol and worst[1] > rtol:
+                div = Divergence(
+                    path=path, eqn_index=i, primitive=str(eqn.primitive),
+                    max_abs_err=worst[0], max_rel_err=worst[1],
+                    out_shapes=[np.shape(np.asarray(o)) for o in outs_t],
+                    source=source_info_util.summarize(eqn.source_info))
+                # level 3: descend into the sub-jaxpr if present
+                if depth > 0:
+                    for pname in SUB_JAXPR_PARAMS:
+                        sub = eqn.params.get(pname)
+                        if sub is None:
+                            continue
+                        subs = sub if isinstance(sub, (tuple, list)) else [sub]
+                        for sj in subs:
+                            inner = getattr(sj, "jaxpr", sj)
+                            iconsts = getattr(sj, "consts", getattr(sj, "literals", []))
+                            try:
+                                inner_div = _walk_jaxpr(
+                                    inner, iconsts, in_t,
+                                    rtol=rtol, atol=atol, depth=depth - 1,
+                                    path=path + (f"eqn[{i}]:{eqn.primitive}",))
+                            except Exception:
+                                inner_div = None
+                            if inner_div is not None:
+                                return inner_div
+                return div
+            # continue with the oracle values cast back where the test env
+            # would otherwise accumulate the same rounding error twice
+            for var, val in zip(eqn.outvars, outs_t):
+                write(env_t, var, val)
+            for var, val in zip(eqn.outvars, outs_o):
+                write(env_o, var, val)
+    return None
+
+
+def compare_implementations(fn_a: Callable, fn_b: Callable, args: Sequence[Any],
+                            rtol: float = 1e-3, atol: float = 1e-4
+                            ) -> Tuple[bool, float]:
+    """Level-1 check: two implementations of the same math (e.g. the conv
+    algorithms of §V, or a Pallas kernel vs its ref.py oracle)."""
+    out_a = jax.tree.leaves(fn_a(*args))
+    out_b = jax.tree.leaves(fn_b(*args))
+    worst = 0.0
+    for a, b in zip(out_a, out_b):
+        ae, _ = _err(a, b)
+        worst = max(worst, ae)
+    scale = max(float(np.max(np.abs(_as_np(out_b[0])))) if out_b else 1.0, 1e-30)
+    ok = worst <= atol + rtol * scale
+    return ok, worst

@@ -1,0 +1,34 @@
+"""Timeline export: chrome://tracing JSON + CSV."""
+from __future__ import annotations
+
+import json
+from typing import List
+
+from repro.core.engine import SimReport
+
+
+def to_chrome_trace(report: SimReport) -> str:
+    events = []
+    lanes = {"mxu": 0, "vpu": 1, "hbm": 2, "ici": 3, "overhead": 4}
+    for e in report.timeline:
+        events.append({
+            "name": f"{e.opcode}:{e.name}" + (f" x{int(e.scale)}" if e.scale > 1 else ""),
+            "cat": e.unit,
+            "ph": "X",
+            "ts": e.start * 1e6,
+            "dur": max(e.duration * e.scale * 1e6, 0.01),
+            "pid": 0,
+            "tid": lanes.get(e.unit, 5),
+            "args": {"flops": e.flops, "hbm_bytes": e.hbm_bytes,
+                     "ici_bytes": e.ici_bytes, "scale": e.scale},
+        })
+    return json.dumps({"traceEvents": events, "displayTimeUnit": "ns"})
+
+
+def to_csv(report: SimReport) -> str:
+    rows = ["name,opcode,unit,start_s,duration_s,scale,flops,hbm_bytes,ici_bytes"]
+    for e in report.timeline:
+        rows.append(f"{e.name},{e.opcode},{e.unit},{e.start:.4e},"
+                    f"{e.duration:.4e},{e.scale},{e.flops:.4e},"
+                    f"{e.hbm_bytes:.4e},{e.ici_bytes:.4e}")
+    return "\n".join(rows)

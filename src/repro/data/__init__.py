@@ -1,0 +1,5 @@
+from repro.data.pipeline import DataPipeline, shard_batch
+from repro.data.synthetic import synthetic_lm_batches, synthetic_mnist_batches
+
+__all__ = ["DataPipeline", "shard_batch", "synthetic_lm_batches",
+           "synthetic_mnist_batches"]

@@ -1,0 +1,63 @@
+"""Host-side data pipeline: background prefetch + device placement.
+
+``shard_batch`` places numpy batches onto the mesh with the batch-axis
+sharding the step expects (per-process slices in a real multi-host job would
+use ``jax.make_array_from_process_local_data``; on one host ``device_put``
+with a NamedSharding is the same code path).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import Rules, axes_to_pspec
+
+
+def shard_batch(batch: Dict[str, np.ndarray], axes: Dict[str, tuple],
+                rules: Rules, mesh: Optional[Mesh]):
+    if mesh is None:
+        return jax.tree.map(jax.numpy.asarray, batch)
+    out = {}
+    for k, v in batch.items():
+        sh = NamedSharding(mesh, axes_to_pspec(axes[k], rules))
+        out[k] = jax.device_put(v, sh)
+    return out
+
+
+class DataPipeline:
+    """Iterator wrapper with a daemon prefetch thread (depth-N queue)."""
+
+    def __init__(self, source: Iterator, axes: Dict[str, tuple],
+                 rules: Rules, mesh: Optional[Mesh], prefetch: int = 2):
+        self._source = source
+        self._axes, self._rules, self._mesh = axes, rules, mesh
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        try:
+            for item in self._source:
+                if self._stop.is_set():
+                    return
+                self._q.put(shard_batch(item, self._axes, self._rules, self._mesh))
+        except Exception as e:          # surface worker errors to the consumer
+            self._q.put(e)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+    def close(self):
+        self._stop.set()

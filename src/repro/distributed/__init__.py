@@ -1,0 +1,15 @@
+from repro.distributed.mesh import build_mesh, make_mesh_config
+from repro.distributed.sharding import (
+    Rules,
+    axes_to_pspec,
+    lc,
+    logical_rules,
+    param_shardings,
+    rules_for,
+    use_rules,
+)
+
+__all__ = [
+    "build_mesh", "make_mesh_config", "Rules", "axes_to_pspec", "lc",
+    "logical_rules", "param_shardings", "rules_for", "use_rules",
+]

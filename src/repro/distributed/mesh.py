@@ -1,0 +1,61 @@
+"""Device-mesh construction from MeshConfig.
+
+``build_mesh`` is the only place that touches ``jax.devices()``; everything else
+works with the abstract ``MeshConfig``.  For elastic restarts the mesh can be
+rebuilt from however many devices survive (`allow_fewer`).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.config import MeshConfig
+
+
+def make_mesh_config(num_devices: int, model_parallel: int = 1,
+                     pods: int = 1) -> MeshConfig:
+    """Derive a MeshConfig for an arbitrary device count (elastic rescale)."""
+    if num_devices % (model_parallel * pods):
+        raise ValueError(
+            f"{num_devices} devices not divisible by model={model_parallel} x pods={pods}")
+    data = num_devices // (model_parallel * pods)
+    if pods > 1:
+        return MeshConfig((pods, data, model_parallel), ("pod", "data", "model"))
+    return MeshConfig((data, model_parallel), ("data", "model"))
+
+
+def build_mesh(cfg: MeshConfig, devices: Optional[Sequence] = None,
+               allow_fewer: bool = False) -> Mesh:
+    """Build a jax Mesh for ``cfg``.
+
+    If the process has fewer devices than cfg requests and ``allow_fewer`` is
+    set, shrink the data axis (elastic degradation) — the model axis is kept
+    because parameter shardings depend on it.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    need = cfg.num_devices
+    if len(devices) < need:
+        if not allow_fewer:
+            raise ValueError(
+                f"mesh {cfg.shape} needs {need} devices, have {len(devices)} "
+                f"(set XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+                f"for a dry-run, or pass allow_fewer=True for elastic shrink)")
+        cfg = shrink_to(cfg, len(devices))
+        need = cfg.num_devices
+    dev_array = np.asarray(devices[:need]).reshape(cfg.shape)
+    return Mesh(dev_array, cfg.axis_names)
+
+
+def shrink_to(cfg: MeshConfig, num_devices: int) -> MeshConfig:
+    """Elastic shrink: keep the model axis, shrink data (and drop pod) axes."""
+    model = cfg.axis_size("model")
+    if num_devices < model:
+        raise ValueError(f"cannot shrink below model-parallel degree {model}")
+    data = num_devices // model
+    # round data down to a power of two for balanced collectives
+    data = 2 ** int(math.log2(data)) if data > 0 else 1
+    return MeshConfig((data, model), ("data", "model"))

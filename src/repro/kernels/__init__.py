@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots the paper studies.
+
+Each kernel ships three layers:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jitted public wrapper (padding, layout, interpret fallback)
+  ref.py    — pure-jnp oracle used by the differential debugger + tests
+
+Kernels: flash_attention (causal/window/GQA online-softmax attention),
+tiled_matmul (block-configurable GEMM — the §V GEMM-algorithm case study),
+winograd (F(2x2,3x3) conv — the paper's headline cuDNN algorithm).
+"""
+from repro.kernels.dispatch import use_flash_attention
+
+__all__ = ["use_flash_attention"]

@@ -1,0 +1,22 @@
+"""Backend dispatch: swap pure-jnp reference math for Pallas kernels.
+
+The models call reference implementations by default (CPU dry-runs, tests);
+on TPU — or when forced for interpret-mode validation — the Pallas kernels
+take over.  The simulator models both variants, which is how EXPERIMENTS.md
+§Perf quantifies the kernel's memory-term win without hardware.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_FORCE = os.environ.get("REPRO_FORCE_PALLAS", "")
+
+
+def use_flash_attention() -> bool:
+    if _FORCE == "1":
+        return True
+    if _FORCE == "0":
+        return False
+    return jax.default_backend() == "tpu"

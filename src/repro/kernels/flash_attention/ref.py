@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash-attention kernel (no tiling, fp32 softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  softcap: float = 0.0) -> jax.Array:
+    """q: (b, h, s, d); k/v: (b, kv, t, d). GQA by head grouping."""
+    b, h, s, d = q.shape
+    _, kvh, t, _ = k.shape
+    group = h // kvh
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) / (d ** 0.5)
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    ok = jnp.ones((s, t), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= (q_pos - k_pos) < window
+    scores = jnp.where(ok, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs,
+                      vq.astype(jnp.float32)).astype(q.dtype)

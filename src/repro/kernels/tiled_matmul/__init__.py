@@ -1,0 +1,5 @@
+from repro.kernels.tiled_matmul.kernel import tiled_matmul
+from repro.kernels.tiled_matmul.ops import matmul
+from repro.kernels.tiled_matmul.ref import matmul_ref
+
+__all__ = ["tiled_matmul", "matmul", "matmul_ref"]

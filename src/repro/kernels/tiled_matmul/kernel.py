@@ -1,0 +1,54 @@
+"""Block-tiled matmul Pallas kernel (the paper's GEMM-algorithm case study
+subject, §V: the simulator compares how block shape changes memory behaviour).
+
+grid = (M/bm, N/bn, K/bk), K minor (sequential) -> fp32 VMEM accumulator.
+Block shapes are arguments so the benchmark harness can sweep them and the
+simulator can show the bandwidth/occupancy trade-off per configuration.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_scr):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def tiled_matmul(a: jax.Array, b: jax.Array, *, block_m: int = 128,
+                 block_n: int = 128, block_k: int = 128,
+                 interpret: bool = True) -> jax.Array:
+    """a: (M, K), b: (K, N) -> (M, N). Dims must divide by the blocks
+    (ops.py pads)."""
+    m, k = a.shape
+    _, n = b.shape
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda im, jn, ik: (im, ik)),
+            pl.BlockSpec((block_k, block_n), lambda im, jn, ik: (ik, jn)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda im, jn, ik: (im, jn)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,26 @@
+"""Jitted wrapper with padding + backend dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tiled_matmul.kernel import tiled_matmul
+
+
+def _pad2(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    return jnp.pad(x, ((0, p0), (0, p1))) if (p0 or p1) else x
+
+
+def matmul(a: jax.Array, b: jax.Array, *, block_m: int = 128,
+           block_n: int = 128, block_k: int = 128) -> jax.Array:
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    ap = _pad2(a, block_m, block_k)
+    bp = _pad2(b, block_k, block_n)
+    out = tiled_matmul(ap, bp, block_m=block_m, block_n=block_n,
+                       block_k=block_k,
+                       interpret=jax.default_backend() != "tpu")
+    return out[:m, :n]

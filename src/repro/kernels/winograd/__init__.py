@@ -1,0 +1,5 @@
+from repro.kernels.winograd.kernel import winograd_tiles
+from repro.kernels.winograd.ops import conv3x3_winograd
+from repro.kernels.winograd.ref import conv3x3_ref
+
+__all__ = ["winograd_tiles", "conv3x3_winograd", "conv3x3_ref"]

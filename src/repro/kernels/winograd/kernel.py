@@ -1,0 +1,65 @@
+"""Winograd F(2x2, 3x3) convolution Pallas kernel (the paper's headline
+cuDNN algorithm, §I/§V — "Winograd Nonfused" had the highest IPC).
+
+ops.py extracts overlapping 4x4 input tiles (stride 2) with XLA; the kernel
+does the transform-domain work per tile block entirely in VMEM:
+
+    V = B^T d B          (input transform,  4x4 per tile)
+    M = V * U            (batched (16,cin)x(16,cin,cout) contraction -> MXU)
+    Y = A^T M A          (output transform, 2x2 per tile)
+
+U (the filter transform) is precomputed once in ops.py.  grid = (batch,
+tile_rows); each step processes a full row of tiles so the cin->cout
+contraction is one well-shaped matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BT = np.array([[1, 0, -1, 0], [0, 1, 1, 0], [0, -1, 1, 0], [0, 1, 0, -1]],
+              np.float32)
+AT = np.array([[1, 1, 1, 0], [0, 1, -1, -1]], np.float32)
+G = np.array([[1, 0, 0], [0.5, 0.5, 0.5], [0.5, -0.5, 0.5], [0, 0, 1]],
+             np.float32)
+
+
+def _wino_kernel(tiles_ref, u_ref, bt_ref, at_ref, o_ref):
+    # tiles: (1, 1, TW, 4, 4, cin); u: (4, 4, cin, cout); o: (1, 1, TW, 2, 2, cout)
+    tiles = tiles_ref[0, 0].astype(jnp.float32)         # (TW, 4, 4, cin)
+    u = u_ref[...].astype(jnp.float32)                  # (4, 4, cin, cout)
+    bt = bt_ref[...]                                    # (4, 4) transform consts
+    at = at_ref[...]                                    # (2, 4)
+    # V = BT @ d @ B  per tile/channel
+    v = jnp.einsum("ij,tjkc,lk->tilc", bt, tiles, bt)   # (TW, 4, 4, cin)
+    # transform-domain contraction: per (i,l) position, (TW,cin)@(cin,cout)
+    m = jnp.einsum("tilc,ilcf->tilf", v, u)             # (TW, 4, 4, cout)
+    # Y = AT @ m @ A
+    y = jnp.einsum("ij,tjkf,lk->tilf", at, m, at)       # (TW, 2, 2, cout)
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+
+def winograd_tiles(tiles: jax.Array, u: jax.Array, *,
+                   interpret: bool = True) -> jax.Array:
+    """tiles: (b, th, tw, 4, 4, cin); u: (4, 4, cin, cout)
+    -> (b, th, tw, 2, 2, cout)."""
+    b, th, tw, _, _, cin = tiles.shape
+    cout = u.shape[-1]
+    return pl.pallas_call(
+        _wino_kernel,
+        grid=(b, th),
+        in_specs=[
+            pl.BlockSpec((1, 1, tw, 4, 4, cin), lambda ib, it: (ib, it, 0, 0, 0, 0)),
+            pl.BlockSpec((4, 4, cin, cout), lambda ib, it: (0, 0, 0, 0)),
+            pl.BlockSpec((4, 4), lambda ib, it: (0, 0)),
+            pl.BlockSpec((2, 4), lambda ib, it: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tw, 2, 2, cout),
+                               lambda ib, it: (ib, it, 0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, th, tw, 2, 2, cout), tiles.dtype),
+        interpret=interpret,
+    )(tiles, u, jnp.asarray(BT), jnp.asarray(AT))

@@ -1,0 +1,10 @@
+"""Oracle: direct (implicit-GEMM) 3x3 convolution via lax.conv."""
+import jax
+import jax.numpy as jnp
+
+
+def conv3x3_ref(x: jax.Array, w: jax.Array, padding: str = "SAME") -> jax.Array:
+    """x: (b, h, w, cin); w: (3, 3, cin, cout)."""
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), window_strides=(1, 1), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))

@@ -1,0 +1,47 @@
+"""Serving launcher: loads (or initializes) params and serves batched
+requests from the synthetic prompt stream.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke
+"""
+import argparse
+
+import jax
+
+from repro import config as C
+from repro.models import build_model
+from repro.runtime.server import Server
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    entry = C.get(args.arch)
+    model_cfg = entry.smoke if args.smoke else entry.full
+    shape = C.ShapeConfig("serve", args.prompt_len + args.max_new,
+                          args.batch, "prefill")
+    rc = C.RunConfig(model=model_cfg, shape=shape, mesh=C.SMOKE_MESH)
+    model = build_model(model_cfg)
+    params = model.init(jax.random.key(0))
+    server = Server(rc, params, temperature=0.7)
+    prompts = jax.random.randint(jax.random.key(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 model_cfg.vocab_size)
+    batch = {"tokens": prompts}
+    if model_cfg.frontend != "none":
+        import jax.numpy as jnp
+        batch["frontend_emb"] = jax.random.normal(
+            jax.random.key(2), (args.batch, model_cfg.frontend_seq,
+                                model_cfg.d_model), jnp.bfloat16)
+    out = server.generate(batch, max_new_tokens=args.max_new)
+    print(f"generated {out.shape} tokens; "
+          f"decode {server.stats.decode_tok_per_s:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

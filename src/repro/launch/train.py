@@ -1,0 +1,46 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
+        [--shape train_4k] [--steps N] [--smoke] [--multi-pod]
+
+--smoke uses the reduced config + tiny shapes on local devices (CI path);
+the full path expects a real TPU slice whose device count matches the mesh.
+"""
+import argparse
+
+from repro import config as C
+from repro.runtime.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    entry = C.get(args.arch)
+    if args.smoke:
+        model = entry.smoke
+        shape = C.ShapeConfig("smoke_train", 64, 4, "train")
+        mesh_cfg = C.SMOKE_MESH
+        use_mesh = False
+    else:
+        model = entry.full
+        shape = C.SHAPES_BY_NAME[args.shape]
+        mesh_cfg = C.MULTI_POD_MESH if args.multi_pod else C.SINGLE_POD_MESH
+        use_mesh = True
+    train = C.TrainConfig(total_steps=args.steps or 100,
+                          checkpoint_dir=args.ckpt_dir,
+                          accum_steps=entry.accum_steps)
+    rc = C.RunConfig(model=model, shape=shape, mesh=mesh_cfg, train=train)
+    report = Trainer(rc, use_mesh=use_mesh).train()
+    print(f"done: steps={report.steps_done} final_loss={report.final_loss:.4f} "
+          f"restarts={report.restarts}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Model zoo: one builder per family, uniform duck-typed interface.
+
+Every model exposes: ``param_specs/init/abstract/axes``, ``loss`` (train),
+``prefill``/``decode_step`` (serving, where applicable), ``train_input_specs``/
+``prefill_input_specs``/``decode_state_specs`` and ``logical_overrides``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.config import ModelConfig, ShardingConfig
+from repro.models.layers import spec_param_count
+
+
+def build_model(cfg: ModelConfig, sharding: Optional[ShardingConfig] = None,
+                **kw):
+    sharding = sharding or ShardingConfig()
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.transformer import DecoderLM
+        return DecoderLM(cfg, sharding)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import HybridLM
+        return HybridLM(cfg, sharding)
+    if cfg.family == "ssm":
+        from repro.models.rwkv_model import RWKVLM
+        return RWKVLM(cfg, sharding)
+    if cfg.family in ("encdec", "audio"):
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg, sharding)
+    if cfg.family == "conv":
+        from repro.models.lenet import LeNet
+        return LeNet(cfg, sharding, **kw)
+    raise ValueError(f"no builder for family {cfg.family!r}")
+
+
+def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    model = build_model(cfg)
+    frac = 1.0
+    if active_only and cfg.num_experts:
+        frac = cfg.experts_per_token / cfg.num_experts
+    return spec_param_count(model.param_specs(), active_expert_frac=frac)

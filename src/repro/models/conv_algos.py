@@ -1,0 +1,116 @@
+"""The paper's §V case-study axis: cuDNN convolution algorithms re-implemented
+as selectable JAX lowerings.
+
+The paper iterates conv_sample over FFT / FFT-tiling / GEMM / implicit-GEMM /
+Winograd / Winograd-nonfused and compares DRAM-bank + IPC behaviour.  We
+implement the four algorithmically distinct forward paths:
+
+* ``gemm``      — explicit im2col + one big matmul (cuDNN GEMM)
+* ``implicit``  — ``lax.conv_general_dilated`` (XLA's native lowering; the
+                  TPU analogue of implicit GEMM: no materialized im2col)
+* ``winograd``  — F(2x2, 3x3) transform-domain conv (3x3 kernels)
+* ``fft``       — rfft2 pointwise-product conv (the paper's fft2d_r2c kernels)
+
+All take/return NHWC.  Each is mathematically the same convolution, so the
+differential debugger (core/debug.py) can cross-check them against each other —
+exactly how the paper localized the ``rem.u32`` / ``bfe`` functional bugs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ALGOS = ("gemm", "implicit", "winograd", "fft")
+
+
+def _same_pad(x: jax.Array, kh: int, kw: int) -> jax.Array:
+    ph, pw = kh // 2, kw // 2
+    return jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+
+
+def conv_implicit(x: jax.Array, w: jax.Array, padding: str = "SAME") -> jax.Array:
+    """x: (b, h, w, cin); w: (kh, kw, cin, cout)."""
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), window_strides=(1, 1), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def conv_gemm(x: jax.Array, w: jax.Array, padding: str = "SAME") -> jax.Array:
+    """Explicit im2col: materialize patches, then a single GEMM."""
+    kh, kw, cin, cout = w.shape
+    if padding == "SAME":
+        x = _same_pad(x, kh, kw)
+    b, H, W, _ = x.shape
+    oh, ow = H - kh + 1, W - kw + 1
+    idx_h = jnp.arange(oh)[:, None] + jnp.arange(kh)[None, :]   # (oh, kh)
+    idx_w = jnp.arange(ow)[:, None] + jnp.arange(kw)[None, :]   # (ow, kw)
+    patches = x[:, idx_h][:, :, :, idx_w]                       # (b, oh, kh, ow, kw, cin)
+    patches = patches.transpose(0, 1, 3, 2, 4, 5).reshape(b, oh * ow, kh * kw * cin)
+    out = patches @ w.reshape(kh * kw * cin, cout).astype(x.dtype)
+    return out.reshape(b, oh, ow, cout)
+
+
+# --- Winograd F(2x2, 3x3) ---------------------------------------------------
+
+_BT = np.array([[1, 0, -1, 0], [0, 1, 1, 0], [0, -1, 1, 0], [0, 1, 0, -1]], np.float32)
+_G = np.array([[1, 0, 0], [0.5, 0.5, 0.5], [0.5, -0.5, 0.5], [0, 0, 1]], np.float32)
+_AT = np.array([[1, 1, 1, 0], [0, 1, -1, -1]], np.float32)
+
+
+def conv_winograd(x: jax.Array, w: jax.Array, padding: str = "SAME") -> jax.Array:
+    """F(2x2, 3x3) Winograd. Requires kh == kw == 3."""
+    kh, kw, cin, cout = w.shape
+    if (kh, kw) != (3, 3):
+        return conv_gemm(x, w, padding)
+    if padding == "SAME":
+        x = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    b, H, W, _ = x.shape
+    oh, ow = H - 2, W - 2                      # valid output size
+    th, tw = (oh + 1) // 2, (ow + 1) // 2      # number of 2x2 output tiles
+    # pad so tiles cover exactly
+    x = jnp.pad(x, ((0, 0), (0, 2 * th + 2 - H), (0, 2 * tw + 2 - W), (0, 0)))
+    # extract 4x4 input tiles with stride 2
+    i = jnp.arange(th) * 2
+    j = jnp.arange(tw) * 2
+    tiles = x[:, i[:, None] + jnp.arange(4)[None]][:, :, :, j[:, None] + jnp.arange(4)[None]]
+    # tiles: (b, th, 4, tw, 4, cin) -> (b, th, tw, 4, 4, cin)
+    tiles = tiles.transpose(0, 1, 3, 2, 4, 5)
+    BT = jnp.asarray(_BT, x.dtype)
+    G = jnp.asarray(_G, x.dtype)
+    AT = jnp.asarray(_AT, x.dtype)
+    V = jnp.einsum("ij,btujkc,lk->btuilc", BT, tiles, BT)       # (b,th,tw,4,4,cin)
+    U = jnp.einsum("ij,jkcf,lk->ilcf", G, w.astype(x.dtype), G)  # (4,4,cin,cout)
+    M = jnp.einsum("btuilc,ilcf->btuilf", V, U)                 # elementwise over (4,4)
+    Y = jnp.einsum("ij,btujkf,lk->btuilf", AT, M, AT)           # (b,th,tw,2,2,cout)
+    out = Y.transpose(0, 1, 3, 2, 4, 5).reshape(b, 2 * th, 2 * tw, cout)
+    return out[:, :oh, :ow]
+
+
+def conv_fft(x: jax.Array, w: jax.Array, padding: str = "SAME") -> jax.Array:
+    """FFT conv (the paper's fft2d_r2c/c2r kernel pair)."""
+    kh, kw, cin, cout = w.shape
+    if padding == "SAME":
+        x = _same_pad(x, kh, kw)
+    b, H, W, _ = x.shape
+    xf = jnp.fft.rfft2(x.astype(jnp.float32), axes=(1, 2))          # (b,H,Wf,cin)
+    wflip = w[::-1, ::-1].astype(jnp.float32)                       # correlation
+    wpad = jnp.pad(wflip, ((0, H - kh), (0, W - kw), (0, 0), (0, 0)))
+    wf = jnp.fft.rfft2(wpad, axes=(0, 1))                           # (H,Wf,cin,cout)
+    yf = jnp.einsum("bhwc,hwcf->bhwf", xf, wf)
+    y = jnp.fft.irfft2(yf, s=(H, W), axes=(1, 2))
+    return y[:, kh - 1:, kw - 1:, :].astype(x.dtype)
+
+
+CONV_FNS = {"gemm": conv_gemm, "implicit": conv_implicit,
+            "winograd": conv_winograd, "fft": conv_fft}
+
+
+def conv2d(x: jax.Array, w: jax.Array, algo: str = "implicit",
+           padding: str = "SAME") -> jax.Array:
+    if algo not in CONV_FNS:
+        raise ValueError(f"unknown conv algo {algo!r}; options {ALGOS}")
+    return CONV_FNS[algo](x, w, padding)

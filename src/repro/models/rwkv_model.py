@@ -1,0 +1,176 @@
+"""RWKV6 LM (family "ssm"): attention-free, O(1)-state decode."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MeshConfig, ModelConfig, ShapeConfig, ShardingConfig
+from repro.distributed.sharding import lc
+from repro.models import rwkv
+from repro.models.layers import (
+    ParamSpec, abstract_params, axes_tree, init_params, lm_loss_from_hidden, pad_vocab,
+    rms_norm, rms_norm_spec, softmax_cross_entropy, stack_specs,
+)
+from repro.models.transformer import _remat
+
+
+class RWKVLM:
+    def __init__(self, cfg: ModelConfig, sharding: ShardingConfig = ShardingConfig()):
+        self.cfg = cfg
+        self.sharding = sharding
+
+    def layer_specs(self) -> Dict[str, Any]:
+        return {
+            "ln1": rms_norm_spec(self.cfg.d_model),
+            "time": rwkv.rwkv_time_specs(self.cfg),
+            "ln2": rms_norm_spec(self.cfg.d_model),
+            "channel": rwkv.rwkv_channel_specs(self.cfg),
+        }
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        return {
+            "embed": ParamSpec((pad_vocab(cfg.vocab_size), cfg.d_model),
+                               (None, "embed_tbl"), init="embed", scale=0.02),
+            "ln_in": rms_norm_spec(cfg.d_model),
+            "layers": stack_specs(self.layer_specs(), cfg.num_layers),
+            "ln_f": rms_norm_spec(cfg.d_model),
+            "head": ParamSpec((cfg.d_model, pad_vocab(cfg.vocab_size)),
+                              ("fsdp", "vocab")),
+        }
+
+    def init(self, key):
+        return init_params(self.param_specs(), key, self.cfg.dtype)
+
+    def abstract(self):
+        return abstract_params(self.param_specs(), self.cfg.dtype)
+
+    def axes(self):
+        return axes_tree(self.param_specs())
+
+    def logical_overrides(self, mesh_cfg: MeshConfig) -> Dict[str, Any]:
+        return {}
+
+    # ----------------------------------------------------------------- train
+    def hidden(self, params, tokens):
+        cfg = self.cfg
+        b, s = tokens.shape
+        heads, hd = rwkv._dims(cfg)
+        x = jnp.take(lc(params["embed"], (None, "embed_tbl")), tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+        x = rms_norm(x, params["ln_in"], cfg.norm_eps)
+        x = lc(x, ("batch", "act_seq", "embed"))
+        zeros_prev = jnp.zeros((b, 1, cfg.d_model), x.dtype)
+        state0 = jnp.zeros((b, heads, hd, hd), jnp.float32)
+
+        def layer(x, p_l):
+            h = rms_norm(x, p_l["ln1"], cfg.norm_eps)
+            y, _, _ = rwkv.rwkv_time_mix(p_l["time"], cfg, h, zeros_prev, state0)
+            x = x + y
+            h = rms_norm(x, p_l["ln2"], cfg.norm_eps)
+            y, _ = rwkv.rwkv_channel_mix(p_l["channel"], cfg, h, zeros_prev)
+            return lc(x + y, ("batch", "act_seq", "embed")), None
+
+        x, _ = jax.lax.scan(_remat(layer, self.sharding.remat_policy),
+                            x, params["layers"])
+        return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+    def forward(self, params, tokens):
+        x = self.hidden(params, tokens)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+        return lc(logits, ("batch", "act_seq", "vocab"))
+
+    def loss(self, params, batch):
+        x = self.hidden(params, batch["tokens"])
+        loss, ce = lm_loss_from_hidden(x, params["head"], batch["labels"],
+                                       z_loss=1e-4)
+        return loss, {"ce": ce}
+
+    # --------------------------------------------------------------- serving
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        heads, hd = rwkv._dims(cfg)
+        x = jnp.take(lc(params["embed"], (None, "embed_tbl")), tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+        x = rms_norm(x, params["ln_in"], cfg.norm_eps)
+        zeros_prev = jnp.zeros((b, 1, cfg.d_model), x.dtype)
+        state0 = jnp.zeros((b, heads, hd, hd), jnp.float32)
+
+        def layer(x, p_l):
+            h = rms_norm(x, p_l["ln1"], cfg.norm_eps)
+            y, tm_prev, state = rwkv.rwkv_time_mix(p_l["time"], cfg, h,
+                                                   zeros_prev, state0)
+            x = x + y
+            h2 = rms_norm(x, p_l["ln2"], cfg.norm_eps)
+            y, cm_prev = rwkv.rwkv_channel_mix(p_l["channel"], cfg, h2, zeros_prev)
+            cache = {"state": state, "tm_prev": tm_prev, "cm_prev": cm_prev}
+            return x + y, cache
+
+        x, caches = jax.lax.scan(layer, x, params["layers"])
+        x = rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+        caches["pos"] = jnp.asarray(s, jnp.int32)
+        return logits, caches
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = jnp.take(params["embed"], batch["token"], axis=0).astype(
+            jnp.dtype(cfg.dtype))
+        x = rms_norm(x, params["ln_in"], cfg.norm_eps)
+
+        def layer(x, inp):
+            p_l, st, tm_prev, cm_prev = inp
+            h = rms_norm(x, p_l["ln1"], cfg.norm_eps)
+            y, tm_new, st_new = rwkv.rwkv_time_decode(p_l["time"], cfg, h,
+                                                      tm_prev, st)
+            x = x + y
+            h2 = rms_norm(x, p_l["ln2"], cfg.norm_eps)
+            y, cm_new = rwkv.rwkv_channel_decode(p_l["channel"], cfg, h2, cm_prev)
+            return x + y, {"state": st_new, "tm_prev": tm_new, "cm_prev": cm_new}
+
+        x, new_caches = jax.lax.scan(
+            layer, x, (params["layers"], cache["state"],
+                       cache["tm_prev"], cache["cm_prev"]))
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+        new_caches["pos"] = pos + 1
+        return logits, new_caches
+
+    # ------------------------------------------------------------------ specs
+    def text_len(self, shape: ShapeConfig) -> int:
+        return shape.seq_len
+
+    def train_input_specs(self, shape: ShapeConfig):
+        b, s = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return ({"tokens": tok, "labels": tok},
+                {"tokens": ("batch", "seq"), "labels": ("batch", "seq")})
+
+    def prefill_input_specs(self, shape: ShapeConfig):
+        specs, axes = self.train_input_specs(shape)
+        specs.pop("labels"), axes.pop("labels")
+        return specs, axes
+
+    def decode_state_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        b = shape.global_batch
+        heads, hd = rwkv._dims(cfg)
+        L = cfg.num_layers
+        act = jnp.dtype(cfg.dtype)
+        cache = {
+            "state": jax.ShapeDtypeStruct((L, b, heads, hd, hd), jnp.float32),
+            "tm_prev": jax.ShapeDtypeStruct((L, b, 1, cfg.d_model), act),
+            "cm_prev": jax.ShapeDtypeStruct((L, b, 1, cfg.d_model), act),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        cache_axes = {
+            "state": ("layers", "batch", "ssm_heads", None, None),
+            "tm_prev": ("layers", "batch", None, "embed"),
+            "cm_prev": ("layers", "batch", None, "embed"),
+            "pos": (),
+        }
+        tok = {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        return cache, cache_axes, tok, {"token": ("batch", "seq")}

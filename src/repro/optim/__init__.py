@@ -1,0 +1,7 @@
+from repro.optim.adamw import (
+    TrainState, abstract_state, adamw_update, global_norm, init_state, state_axes,
+)
+from repro.optim.schedule import warmup_cosine
+
+__all__ = ["TrainState", "abstract_state", "adamw_update", "global_norm",
+           "init_state", "state_axes", "warmup_cosine"]

@@ -1,0 +1,84 @@
+"""AdamW with fp32 master weights (mixed-precision training).
+
+Optimizer state inherits each parameter's logical sharding axes, so under FSDP
+rules the master/m/v tensors are sharded over (data x model) exactly like the
+bf16 parameters — the ZeRO-style memory layout that lets dbrx-132b fit
+16 GB/chip on the 256-chip pod.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class TrainState(NamedTuple):
+    step: jax.Array            # () int32
+    params: Any                # compute-dtype (bf16) pytree
+    master: Any                # fp32 master copy
+    m: Any                     # fp32 first moment
+    v: Any                     # fp32 second moment
+
+
+def init_state(params: Any) -> TrainState:
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return TrainState(jnp.zeros((), jnp.int32), params,
+                      master, jax.tree.map(zeros, params),
+                      jax.tree.map(zeros, params))
+
+
+def abstract_state(abstract_params: Any) -> TrainState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return TrainState(jax.ShapeDtypeStruct((), jnp.int32), abstract_params,
+                      jax.tree.map(f32, abstract_params),
+                      jax.tree.map(f32, abstract_params),
+                      jax.tree.map(f32, abstract_params))
+
+
+def state_axes(param_axes: Any) -> TrainState:
+    """Logical axes pytree matching TrainState structure."""
+    return TrainState((), param_axes, param_axes, param_axes, param_axes)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(state: TrainState, grads: Any, cfg: TrainConfig,
+                 lr_fn: Callable) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+    step = state.step + 1
+    lr = lr_fn(step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, master, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        new_master = master - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                    + cfg.weight_decay * master)
+        return new_master, m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_ma = treedef.flatten_up_to(state.master)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(g, ma, m, v) for g, ma, m, v in zip(flat_g, flat_ma, flat_m, flat_v)]
+    new_master = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(
+        lambda ma, p: ma.astype(p.dtype), new_master, state.params)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return TrainState(step, new_params, new_master, new_m, new_v), metrics

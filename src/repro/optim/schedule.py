@@ -1,0 +1,20 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def warmup_cosine(cfg: TrainConfig):
+    """Linear warmup -> cosine decay to 10% of peak."""
+    peak, warm, total = cfg.learning_rate, cfg.warmup_steps, cfg.total_steps
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm_lr = peak * step / jnp.maximum(warm, 1)
+        frac = jnp.clip((step - warm) / jnp.maximum(total - warm, 1), 0.0, 1.0)
+        cos_lr = 0.1 * peak + 0.9 * peak * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warm, warm_lr, cos_lr)
+
+    return lr

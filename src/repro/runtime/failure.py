@@ -1,0 +1,45 @@
+"""Failure & straggler injection for the fault-tolerance loop.
+
+On real clusters failures arrive as device errors / heartbeat timeouts; here a
+``FailurePlan`` injects them deterministically so the recovery logic is
+testable: the trainer must (a) checkpoint at cadence, (b) detect the failure,
+(c) rebuild a (possibly smaller) mesh, (d) restore and continue — the
+elastic-rescale path exercised by tests/test_fault_tolerance.py.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+class NodeFailure(RuntimeError):
+    """Raised mid-training when the failure plan triggers."""
+
+    def __init__(self, step: int, lost_devices: int):
+        super().__init__(f"injected node failure at step {step} "
+                         f"(lost {lost_devices} devices)")
+        self.step = step
+        self.lost_devices = lost_devices
+
+
+@dataclass
+class FailurePlan:
+    """fail_at_step -> number of devices lost."""
+    failures: Dict[int, int] = field(default_factory=dict)
+    # straggler injection: step -> extra seconds of injected delay
+    stragglers: Dict[int, float] = field(default_factory=dict)
+    _fired: set = field(default_factory=set)
+
+    def check(self, step: int) -> None:
+        if step in self.failures and step not in self._fired:
+            self._fired.add(step)
+            raise NodeFailure(step, self.failures[step])
+
+    def straggle(self, step: int) -> float:
+        """Returns injected per-step delay (the trainer's deadline logic
+        measures it and reports mitigation)."""
+        delay = self.stragglers.get(step, 0.0)
+        if delay:
+            time.sleep(delay)
+        return delay

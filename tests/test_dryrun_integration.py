@@ -1,0 +1,31 @@
+"""Integration: the multi-pod dry-run path end-to-end for one cell, in a
+subprocess (the 512-device host platform must not leak into this process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape", [("llama3-8b", "decode_32k")])
+def test_dryrun_cell_compiles(arch, shape, tmp_path):
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape],
+        capture_output=True, text=True, timeout=560,
+        cwd=REPO, env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")})
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "dry-run OK" in res.stdout
+    art = os.path.join(REPO, "experiments", "dryrun",
+                       f"{arch}.{shape}.16x16.json")
+    d = json.load(open(art))
+    assert d["num_devices"] == 256
+    # fits the 16 GiB v5e HBM
+    assert d["memory"]["per_device_bytes"] < 16 * 2**30
+    # IR walker produced trip-scaled totals + a collective census
+    assert d["ir_totals"]["mxu_flops"] > 0
+    assert d["collectives"]["total_bytes"] > 0
+    assert d["engine"]["total_seconds"] > 0
