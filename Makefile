@@ -1,0 +1,31 @@
+# Developer entry points. `make test` is the tier-1 verify command from
+# ROADMAP.md; CI (.github/workflows/ci.yml) runs the same targets.
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test lenet-repro analyze bench lint help
+
+help:
+	@echo "make test         - tier-1 pytest suite (the ROADMAP verify command)"
+	@echo "make lenet-repro  - paper experiments on LeNet incl. phase analysis"
+	@echo "make analyze      - phase-analyze a config (ARCH=lenet by default)"
+	@echo "make bench        - full benchmark driver (benchmarks/run.py)"
+	@echo "make lint         - byte-compile + import-sanity checks"
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+lenet-repro:
+	$(PYTHON) examples/lenet_paper_repro.py --trace /tmp/lenet_trace.json
+
+ARCH ?= lenet
+analyze:
+	$(PYTHON) -m repro.analysis $(ARCH)
+
+bench:
+	$(PYTHON) benchmarks/run.py
+
+lint:
+	$(PYTHON) -m compileall -q src tests examples benchmarks
+	$(PYTHON) -c "import repro.core, repro.analysis, repro.distributed.compression"

@@ -1,0 +1,61 @@
+"""Phase-analysis benchmark (paper §V, Figs. 4/5): run `repro.analysis` over
+representative workloads and emit per-phase structure as CSV.
+
+For each workload, reports the number of detected phases, the distinct phase
+labels, the dominant phase's share of the modeled step time, the HBM-channel
+imbalance, and the launch-overhead tax — the numbers the paper reads off its
+AerialVision plots.  Also asserts the conservation property (bucket sums ==
+SimReport totals) on every run, so the benchmark doubles as an integration
+check of the analysis subsystem.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Simulator
+from repro.models.conv_algos import CONV_FNS
+
+
+def _workloads():
+    """(name, fn, abstract args) cells: conv algos + a collective-bearing LM
+    block so the ici-exposed label gets exercised when multi-device."""
+    x_s = jax.ShapeDtypeStruct((64, 28, 28, 16), jnp.float32)
+    w_s = jax.ShapeDtypeStruct((3, 3, 16, 32), jnp.float32)
+    for algo, fn in CONV_FNS.items():
+        yield (f"phase_conv_{algo}",
+               (lambda fn: lambda x, w: fn(x, w, "SAME"))(fn), (x_s, w_s))
+
+    def mlp_scan(x, w):
+        def body(c, wl):
+            return jax.nn.gelu(c @ wl), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+    yield ("phase_mlp_scan", mlp_scan,
+           (jax.ShapeDtypeStruct((256, 512), jnp.bfloat16),
+            jax.ShapeDtypeStruct((8, 512, 512), jnp.bfloat16)))
+
+
+def run(emit):
+    sim = Simulator()
+    out = {}
+    for name, fn, args in _workloads():
+        cap = sim.capture(fn, *args, name=name)
+        rep = sim.performance(cap)
+        ar = sim.analysis(rep, num_buckets=100)
+        err = ar.reconcile()
+        assert err < 0.01, f"{name}: bucket totals diverge ({err:.4f})"
+        labels = sorted({p.label for p in ar.phases if p.label != "idle"})
+        dom_share = (max(p.seconds for p in ar.phases)
+                     / max(rep.total_seconds, 1e-30)) if ar.phases else 0.0
+        emit(name, rep.total_seconds * 1e6,
+             f"phases={len(ar.phases)};labels={'|'.join(labels)};"
+             f"dom_share={dom_share:.2f};"
+             f"chan_imbalance={ar.channels.imbalance:.2f};"
+             f"overhead_us={rep.launch_overhead_seconds * 1e6:.1f}")
+        out[name] = ar
+    return out
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
   correlation      — Fig. 6/7 per-kernel sim-vs-reference correlation (LeNet)
   power            — Fig. 8 component power breakdown
   conv_algos       — §V cuDNN-algorithm case study (camping/phases/IPC)
+  phase_analysis   — §V Fig. 4/5 repro.analysis phase breakdowns per workload
   checkpointing    — §III-F fidelity-switching checkpoint flow
   kernels          — Pallas kernel micro-benchmarks + modeled v5e times
   roofline         — §Roofline table from the dry-run artifacts (if present)
@@ -21,11 +22,12 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 def main() -> None:
     from benchmarks import (checkpointing, conv_algos, correlation,
-                            kernels_bench, power_breakdown)
+                            kernels_bench, phase_analysis, power_breakdown)
     sections = [
         ("correlation", correlation.run),
         ("power", power_breakdown.run),
         ("conv_algos", conv_algos.run),
+        ("phase_analysis", phase_analysis.run),
         ("checkpointing", checkpointing.run),
         ("kernels", kernels_bench.run),
     ]

@@ -5,10 +5,16 @@
 2. correlate simulator time against the independent reference cost model,
    per kernel class (Fig. 6/7 — paper: within 30% overall);
 3. power breakdown (Fig. 8);
-4. the four cuDNN convolution algorithms through the simulator (§V).
+4. the four cuDNN convolution algorithms through the simulator (§V);
+5. AerialVision-style phase analysis of the whole training step (§V,
+   Fig. 4/5): labeled phases, per-unit occupancy, HBM channel balance.
 
-    PYTHONPATH=src python examples/lenet_paper_repro.py
+    PYTHONPATH=src python examples/lenet_paper_repro.py [--trace out.json]
+
+``--trace PATH`` additionally dumps a chrome://tracing JSON of the step.
 """
+import sys
+
 import jax
 import jax.numpy as jnp
 
@@ -19,7 +25,18 @@ from repro.models import build_model
 from repro.models.conv_algos import CONV_FNS
 
 
+def _trace_path():
+    """Validated --trace argument, resolved before the long run starts."""
+    if "--trace" not in sys.argv:
+        return None
+    i = sys.argv.index("--trace") + 1
+    if i >= len(sys.argv) or sys.argv[i].startswith("-"):
+        sys.exit("--trace requires an output path")
+    return sys.argv[i]
+
+
 def main():
+    trace_path = _trace_path()
     cfg = C.get("lenet").full
     model = build_model(cfg, conv_algo="implicit")
     params = model.init(jax.random.key(0))
@@ -61,11 +78,28 @@ def main():
     for algo, fn in CONV_FNS.items():
         c = sim.capture(lambda x, w: fn(x, w, "SAME"), x_s, w_s, name=algo)
         r = sim.performance(c)
-        vr = sim.vision(r, num_buckets=60)
+        a = sim.analysis(r, num_buckets=60)
         dom = max(r.unit_seconds, key=r.unit_seconds.get)
         print(f"  {algo:9s} modeled={r.total_seconds*1e6:8.1f}us "
-              f"dominant={dom:4s} camping={vr.camping_index:.2f} "
-              f"phases={len(vr.phases)}")
+              f"dominant={dom:4s} camping={a.channels.imbalance:.2f} "
+              f"phases={len(a.phases)}")
+
+    print("== 5. phase analysis of the training step (SS V, Fig. 4/5) ==")
+    ar = sim.analysis(rep, num_buckets=120)
+    print(ar.phase_table())
+    print(ar.ascii_timeline())
+    err = ar.reconcile()
+    print(f"  bucket<->summary reconciliation: max rel error {err*100:.3f}%")
+    assert err < 0.01, f"bucketed totals diverge from SimReport: {err:.4f}"
+    distinct = {p.label for p in ar.phases if p.label != "idle"}
+    assert len(ar.phases) >= 2 and distinct, (
+        "phase segmentation found too few phases")
+    print(f"  detected {len(ar.phases)} phases "
+          f"({len(distinct)} distinct labels: {sorted(distinct)})")
+    if trace_path:
+        with open(trace_path, "w") as f:
+            f.write(ar.to_chrome_trace())
+        print(f"  wrote chrome://tracing JSON -> {trace_path}")
 
 
 if __name__ == "__main__":

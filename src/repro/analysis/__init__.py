@@ -1,0 +1,100 @@
+"""repro.analysis — AerialVision for the TPU simulator (paper §V).
+
+The engine (:mod:`repro.core.engine`) answers *how long* a workload takes;
+this package answers *why*, the way the paper's AerialVision plots do for
+GPGPU-Sim: it post-processes ``SimReport.timeline`` into time-bucketed,
+per-unit views and names the phases.
+
+Components
+----------
+* :mod:`repro.analysis.intervals` — bin the timeline into N buckets with
+  per-bucket MXU/VPU/HBM/ICI occupancy and instruction/FLOP throughput
+  (the paper's per-cycle-window IPC plots, Fig. 4/5);
+* :mod:`repro.analysis.phases`    — detect phase boundaries from shifts in
+  the dominant unit and label each phase compute-bound / bandwidth-bound /
+  ici-exposed / launch-overhead-bound;
+* :mod:`repro.analysis.channels`  — hash per-op HBM traffic across
+  ``hw.hbm_channels`` and report the imbalance (the partition-camping
+  detector, Fig. 22-25);
+* :mod:`repro.analysis.export`    — JSON / chrome://tracing / terminal ASCII
+  renderings of all of the above.
+
+Usage
+-----
+::
+
+    from repro.core import Simulator
+    sim = Simulator()
+    cap = sim.capture(step_fn, *abstract_args)
+    rep = sim.performance(cap)
+
+    ar = sim.analysis(rep, num_buckets=120)   # or rep.analysis()
+    print(ar.phase_table())                   # labeled phase breakdown
+    print(ar.ascii_timeline())                # terminal heatmap + phase strip
+    print(ar.channels.table())                # per-HBM-channel traffic bars
+    open("trace.json", "w").write(ar.to_chrome_trace())  # chrome://tracing
+
+CLI::
+
+    PYTHONPATH=src python -m repro.analysis lenet --buckets 120 \\
+        --chrome-trace /tmp/lenet_trace.json
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+from repro.analysis.channels import (CAMPING_OPS, ChannelReport,
+                                     channel_traffic)
+from repro.analysis.export import ascii_timeline, to_chrome_trace, to_json
+from repro.analysis.intervals import (Interval, IntervalProfile, UNITS,
+                                      profile_intervals)
+from repro.analysis.phases import (Phase, label_interval, phase_table,
+                                   segment_phases)
+from repro.core.engine import SimReport
+from repro.core.hw import HardwareSpec
+
+
+@dataclass
+class AnalysisReport:
+    """Bundled phase-analysis views of one :class:`SimReport`."""
+
+    report: SimReport
+    profile: IntervalProfile
+    phases: List[Phase]
+    channels: ChannelReport
+
+    def phase_table(self) -> str:
+        return phase_table(self.phases)
+
+    def ascii_timeline(self, width: int = 72) -> str:
+        return ascii_timeline(self, width)
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return to_json(self, indent=indent)
+
+    def to_chrome_trace(self) -> str:
+        return to_chrome_trace(self)
+
+    def reconcile(self) -> float:
+        """Max relative error of bucket sums vs ``report.summary()``."""
+        return self.profile.reconcile()
+
+
+def analyze(report: SimReport, num_buckets: int = 120,
+            hw: Optional[HardwareSpec] = None,
+            min_phase_intervals: int = 2) -> AnalysisReport:
+    """One-call pipeline: intervals -> phases -> channels."""
+    profile = profile_intervals(report, num_buckets)
+    phases = segment_phases(profile, min_intervals=min_phase_intervals)
+    channels = channel_traffic(report, hw)
+    return AnalysisReport(report, profile, phases, channels)
+
+
+__all__ = [
+    "AnalysisReport", "analyze",
+    "Interval", "IntervalProfile", "profile_intervals", "UNITS",
+    "Phase", "segment_phases", "label_interval", "phase_table",
+    "ChannelReport", "channel_traffic", "CAMPING_OPS",
+    "to_json", "to_chrome_trace", "ascii_timeline",
+]

@@ -1,0 +1,112 @@
+"""HBM channel model: the paper's DRAM *partition camping* detector, for TPU.
+
+The paper's strongest microarchitectural finding (§V, Fig. 22-25) is that some
+cuDNN kernels concentrate their DRAM traffic on a few memory partitions —
+"partition/bank camping" — so the aggregate DRAM-bandwidth counter looks
+healthy while individual channels saturate.  We reproduce the detector with a
+first-order channel-hash model over ``hw.hbm_channels``:
+
+* contiguous ops (dots, fusions, copies) stripe evenly across every channel —
+  the XLA/TPU tiled layouts interleave, so this is the well-behaved baseline;
+* gather/scatter/dynamic-slice/sort traffic lands on a *hashed subset* of
+  channels (``CAMPING_FRACTION`` of them, start channel = CRC32 of the op
+  name) — data-dependent addressing defeats the interleave exactly the way
+  strided accesses defeat GDDR address swizzling in the paper.
+
+``imbalance`` = hottest-channel bytes / mean-channel bytes; 1.0 is perfectly
+balanced, and anything well above ~1.5 means a minority of channels gates the
+effective bandwidth.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.core.engine import SimReport
+from repro.core.hw import HardwareSpec
+# camping classifier + constants are single-sourced in repro.core.vision;
+# this module refines only the channel *placement* (CRC32-hashed subset
+# instead of vision's fixed prefix)
+from repro.core.vision import CAMPING_FRACTION, CAMPING_OPS, is_camping_op
+
+
+def _camped_channels(name: str, n_channels: int) -> List[int]:
+    """Deterministic channel subset for a camping op (CRC32 start, wrap)."""
+    n = max(int(n_channels * CAMPING_FRACTION), 1)
+    start = zlib.crc32(name.encode()) % n_channels
+    return [(start + i) % n_channels for i in range(n)]
+
+
+@dataclass
+class ChannelReport:
+    """Per-HBM-channel traffic totals for one simulated run."""
+
+    channel_bytes: List[float]        # bytes per channel, index = channel id
+    imbalance: float                  # max / mean channel bytes (1.0 balanced)
+    camping_bytes: float              # bytes issued by camping-pattern ops
+    total_bytes: float
+    hot_channel: int                  # index of the hottest channel
+    hot_contributors: List[Tuple[str, float]]  # (op name, bytes on hot chan)
+
+    @property
+    def camping_fraction_of_traffic(self) -> float:
+        return self.camping_bytes / self.total_bytes if self.total_bytes else 0.0
+
+    def table(self, width: int = 40) -> str:
+        """ASCII per-channel bar chart (the paper's per-DRAM-partition plot)."""
+        peak = max(self.channel_bytes) if self.channel_bytes else 0.0
+        lines = [f"HBM channel traffic  imbalance={self.imbalance:.2f}  "
+                 f"camping traffic={self.camping_fraction_of_traffic * 100:.1f}%"]
+        for ch, b in enumerate(self.channel_bytes):
+            bar = "#" * int(width * (b / peak)) if peak > 0 else ""
+            hot = " <- hot" if ch == self.hot_channel and self.imbalance > 1.05 \
+                else ""
+            lines.append(f"  ch{ch:02d} |{bar:<{width}}| {b / 1e6:8.2f} MB{hot}")
+        if self.hot_contributors:
+            lines.append("  hottest-channel contributors: "
+                         + ", ".join(f"{n} ({b / 1e6:.2f} MB)"
+                                     for n, b in self.hot_contributors[:3]))
+        return "\n".join(lines)
+
+
+def channel_traffic(report: SimReport, hw: Optional[HardwareSpec] = None
+                    ) -> ChannelReport:
+    """Hash every timeline op's HBM traffic across the chip's channels."""
+    hw = hw or report.hw
+    n_ch = hw.hbm_channels
+    per_ch = [0.0] * n_ch
+    camping_bytes = 0.0
+    total = 0.0
+
+    def channels_for(e) -> List[int]:
+        if is_camping_op(e.opcode, e.name):
+            return _camped_channels(e.name, n_ch)
+        return list(range(n_ch))
+
+    for e in report.timeline:
+        b = e.hbm_bytes * e.scale
+        if b <= 0:
+            continue
+        total += b
+        chans = channels_for(e)
+        if len(chans) < n_ch:
+            camping_bytes += b
+        share = b / len(chans)
+        for ch in chans:
+            per_ch[ch] += share
+
+    mean = sum(per_ch) / n_ch if n_ch else 0.0
+    imbalance = (max(per_ch) / mean) if mean > 0 else 1.0
+    hot = max(range(n_ch), key=lambda c: per_ch[c]) if n_ch else 0
+
+    contributors: dict = {}
+    for e in report.timeline:
+        b = e.hbm_bytes * e.scale
+        if b <= 0:
+            continue
+        chans = channels_for(e)
+        if hot in chans:
+            contributors[e.name] = contributors.get(e.name, 0.0) + b / len(chans)
+    top = sorted(contributors.items(), key=lambda kv: -kv[1])[:8]
+    return ChannelReport(per_ch, imbalance, camping_bytes, total, hot, top)

@@ -1,0 +1,124 @@
+"""Exporters: JSON, chrome://tracing, and a terminal ASCII timeline.
+
+Three renderings of the same :class:`~repro.analysis.AnalysisReport`:
+
+* :func:`to_json` — everything (summary, intervals, phases, channels) as one
+  JSON document for notebooks / dashboards;
+* :func:`to_chrome_trace` — Trace Event Format (load in ``chrome://tracing``
+  or Perfetto): per-op duration events on one lane per unit, the detected
+  phases as a ``phases`` lane, and per-bucket occupancy counter tracks;
+* :func:`ascii_timeline` — the in-terminal AerialVision plot: one shaded row
+  per unit plus a phase strip, so the LeNet repro can show its phases in CI
+  logs.
+"""
+from __future__ import annotations
+
+import json
+from typing import List
+
+from repro.analysis.intervals import IntervalProfile, UNITS
+from repro.analysis.phases import Phase
+from repro.core.trace import op_events
+
+# chrome-trace thread id for the phase lane (op lanes: core.trace.LANES)
+_PHASE_TID = 10
+
+#: one-letter key used by the ASCII phase strip
+PHASE_GLYPHS = {
+    "compute-bound": "C",
+    "bandwidth-bound": "B",
+    "ici-exposed": "I",
+    "launch-overhead-bound": "L",
+    "idle": ".",
+}
+
+
+def to_json(analysis, indent: int = None) -> str:
+    """Serialize a full :class:`~repro.analysis.AnalysisReport` to JSON."""
+    prof: IntervalProfile = analysis.profile
+    doc = {
+        "summary": analysis.report.summary(),
+        "hw": analysis.report.hw.name,
+        "num_buckets": len(prof.intervals),
+        "reconcile_max_rel_error": prof.reconcile(),
+        "intervals": [{
+            "t0": iv.t0, "t1": iv.t1,
+            "occupancy": {u: iv.occupancy(u) for u in UNITS},
+            "busy_seconds": dict(iv.busy_seconds),
+            "overhead_seconds": iv.overhead_seconds,
+            "flops": iv.flops, "hbm_bytes": iv.hbm_bytes,
+            "ici_bytes": iv.ici_bytes, "ops_retired": iv.ops_retired,
+        } for iv in prof.intervals],
+        "phases": [{
+            "t0": p.t0, "t1": p.t1, "label": p.label,
+            "dominant_unit": p.dominant_unit, "occupancy": p.occupancy,
+            "flops": p.flops, "hbm_bytes": p.hbm_bytes,
+            "ici_bytes": p.ici_bytes, "ops_retired": p.ops_retired,
+        } for p in analysis.phases],
+        "channels": {
+            "channel_bytes": analysis.channels.channel_bytes,
+            "imbalance": analysis.channels.imbalance,
+            "camping_bytes": analysis.channels.camping_bytes,
+            "hot_channel": analysis.channels.hot_channel,
+            "hot_contributors": analysis.channels.hot_contributors,
+        },
+    }
+    return json.dumps(doc, indent=indent)
+
+
+def to_chrome_trace(analysis) -> str:
+    """Trace Event Format JSON: ops + phase lane + occupancy counters."""
+    events = []
+    for tid, lane in [(0, "mxu"), (1, "vpu"), (2, "hbm"), (3, "ici"),
+                      (4, "overhead"), (_PHASE_TID, "phases")]:
+        events.append({"name": "thread_name", "ph": "M", "pid": 0, "tid": tid,
+                       "args": {"name": lane}})
+    events.extend(op_events(analysis.report))
+    for p in analysis.phases:
+        events.append({
+            "name": p.label, "cat": "phase", "ph": "X",
+            "ts": p.t0 * 1e6, "dur": max(p.seconds * 1e6, 0.01),
+            "pid": 0, "tid": _PHASE_TID,
+            "args": {"dominant_unit": p.dominant_unit,
+                     "occupancy": p.occupancy, "flops": p.flops},
+        })
+    for iv in analysis.profile.intervals:
+        events.append({
+            "name": "occupancy", "cat": "interval", "ph": "C",
+            "ts": iv.t0 * 1e6, "pid": 0,
+            "args": {u: round(iv.occupancy(u), 4) for u in UNITS},
+        })
+    return json.dumps({"traceEvents": events, "displayTimeUnit": "ns"})
+
+
+def ascii_timeline(analysis, width: int = 72) -> str:
+    """Terminal rendering: phase strip + per-unit occupancy heat rows."""
+    prof = analysis.profile
+    if not prof.intervals:
+        return "(empty timeline)"
+    shades = " .:-=+*#%@"
+    n = len(prof.intervals)
+    stride = max(-(-n // width), 1)   # ceil: never render wider than `width`
+    cols = range(0, n, stride)
+
+    def cell_phase(i: int) -> str:
+        t = prof.intervals[i].t0
+        for p in analysis.phases:
+            if p.t0 <= t < p.t1:
+                return PHASE_GLYPHS.get(p.label, "?")
+        return PHASE_GLYPHS["idle"]
+
+    lines = [f"{'phase':>5s} |{''.join(cell_phase(i) for i in cols)}|"]
+    for unit in UNITS:
+        cells = []
+        for i in cols:
+            window = prof.intervals[i:i + stride]
+            v = sum(iv.occupancy(unit) for iv in window) / len(window)
+            cells.append(shades[min(int(v * (len(shades) - 1)),
+                                    len(shades) - 1)])
+        lines.append(f"{unit:>5s} |{''.join(cells)}|")
+    lines.append(f"      0s {'-' * max(len(list(cols)) - 10, 4)} "
+                 f"{prof.end_time:.3e}s")
+    lines.append("      phase key: " + "  ".join(
+        f"{g}={lab}" for lab, g in PHASE_GLYPHS.items()))
+    return "\n".join(lines)

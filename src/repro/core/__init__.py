@@ -6,7 +6,8 @@ Facade:
     cap = sim.capture(step_fn, *abstract_args, mesh=mesh, ...)
     rep = sim.performance(cap)                # detailed timeline (SimReport)
     out = sim.functional(step_fn, *real_args) # bit-exact execution
-    sim.vision(rep)                           # AerialVision-style analysis
+    sim.analysis(rep)                         # phase analysis (repro.analysis)
+    sim.vision(rep)                           # legacy single-file vision view
     sim.power(rep)                            # GPUWattch-style breakdown
     sim.correlate(cap)                        # Fig. 6/7 correlation table
 """
@@ -47,6 +48,11 @@ class Simulator:
 
     def functional(self, fn, *args, steps: int = 1) -> FunctionalResult:
         return run_functional(fn, *args, steps=steps)
+
+    def analysis(self, report: SimReport, num_buckets: int = 120):
+        """Phase analysis: intervals + labeled phases + HBM channel model."""
+        from repro.analysis import analyze
+        return analyze(report, num_buckets=num_buckets, hw=self.hw)
 
     def vision(self, report: SimReport, num_buckets: int = 200) -> VisionReport:
         return vision_analyze(report, self.hw, num_buckets)

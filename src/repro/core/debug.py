@@ -28,6 +28,11 @@ import numpy as np
 from jax.extend import core as jcore
 from jax._src import source_info_util
 
+try:  # jax >= 0.5 re-exports the context manager at top level
+    _enable_x64 = jax.enable_x64
+except AttributeError:  # older jax: experimental module only
+    from jax.experimental import enable_x64 as _enable_x64
+
 
 @dataclass
 class Divergence:
@@ -112,7 +117,7 @@ def _walk_jaxpr(jaxpr, consts, args, *, rtol, atol, depth,
     def write(env, var, val):
         env[var] = val
 
-    with jax.enable_x64(True):
+    with _enable_x64(True):
         for var, const in zip(jaxpr.constvars, consts):
             write(env_t, var, const)
             write(env_o, var, _cast64(const))

@@ -30,28 +30,45 @@ SKIP_OPS = ("parameter", "constant", "tuple", "get-tuple-element", "bitcast",
 
 @dataclass
 class TimelineEntry:
-    name: str
-    opcode: str
-    unit: str
-    start: float
-    duration: float
-    scale: float            # trip-count multiplier
-    flops: float
-    hbm_bytes: float
-    ici_bytes: float
-    comp: str = ""
+    """One scheduled op on the simulated timeline.
+
+    A while-body op is recorded ONCE (its representative iteration) with
+    ``scale`` = trip count; its modeled span on the wall clock is
+    ``duration * scale`` starting at ``start``.  ``flops``/``hbm_bytes``/
+    ``ici_bytes`` are per-iteration — multiply by ``scale`` for totals.
+    """
+
+    name: str               # HLO op name (unique within the module)
+    opcode: str             # HLO opcode ("dot", "fusion", "all-reduce", ...)
+    unit: str               # bottleneck resource: "mxu"|"vpu"|"hbm"|"ici"|"overhead"
+    start: float            # scheduled start time [s]
+    duration: float         # per-iteration modeled duration [s], incl. overhead
+    scale: float            # trip-count multiplier (1.0 outside while bodies)
+    flops: float            # per-iteration FLOPs retired by this op
+    hbm_bytes: float        # per-iteration HBM traffic [bytes]
+    ici_bytes: float        # per-iteration interconnect traffic [bytes]
+    comp: str = ""          # enclosing HLO computation name
+    overhead_s: float = 0.0  # issue/launch-cost portion of ``duration`` [s]
 
 
 @dataclass
 class SimReport:
-    total_seconds: float
-    compute_seconds: float
-    ici_seconds: float
-    exposed_ici_seconds: float
-    unit_seconds: Dict[str, float]
-    total_flops: float
-    total_hbm_bytes: float
-    total_ici_bytes: float
+    """Aggregate result of one performance simulation.
+
+    ``timeline`` holds the per-op schedule (see :class:`TimelineEntry`);
+    everything else is a whole-run total.  Post-process the timeline into
+    time-bucketed per-unit views with :mod:`repro.analysis` (or the
+    :meth:`analysis` shortcut).
+    """
+
+    total_seconds: float          # modeled wall-clock for one step [s]
+    compute_seconds: float        # busy time on the compute core [s]
+    ici_seconds: float            # busy time on the ICI fabric [s]
+    exposed_ici_seconds: float    # ICI time NOT hidden behind compute [s]
+    unit_seconds: Dict[str, float]  # busy seconds keyed by bottleneck unit
+    total_flops: float            # FLOPs retired (trip-count scaled)
+    total_hbm_bytes: float        # HBM traffic [bytes] (trip-count scaled)
+    total_ici_bytes: float        # ICI traffic [bytes] (trip-count scaled)
     timeline: List[TimelineEntry]
     hw: HardwareSpec = V5E
 
@@ -67,6 +84,16 @@ class SimReport:
             return 0.0
         return self.total_hbm_bytes / (self.total_seconds * self.hw.hbm_bw)
 
+    @property
+    def launch_overhead_seconds(self) -> float:
+        """Total per-op issue cost — the paper's kernel-launch-overhead tax."""
+        return sum(e.overhead_s * e.scale for e in self.timeline)
+
+    def analysis(self, num_buckets: int = 120):
+        """Phase-analysis view of this report (see :mod:`repro.analysis`)."""
+        from repro.analysis import analyze
+        return analyze(self, num_buckets=num_buckets)
+
     def summary(self) -> Dict[str, float]:
         return {
             "total_seconds": self.total_seconds,
@@ -78,6 +105,7 @@ class SimReport:
             "total_flops": self.total_flops,
             "total_hbm_bytes": self.total_hbm_bytes,
             "total_ici_bytes": self.total_ici_bytes,
+            "launch_overhead_seconds": self.launch_overhead_seconds,
             **{f"unit_{k}_seconds": v for k, v in self.unit_seconds.items()},
         }
 
@@ -155,7 +183,8 @@ class Engine:
                     local_end = compute_free
                 timeline.append(TimelineEntry(
                     op.name, op.opcode, ot.unit, start, ot.seconds, scale,
-                    ot.flops, ot.hbm_bytes, ot.ici_bytes, comp_name))
+                    ot.flops, ot.hbm_bytes, ot.ici_bytes, comp_name,
+                    overhead_s=ot.overhead_s))
                 self._account(ot, scale, tot, unit_seconds)
             # a computation's result is ready when both resources settle for
             # its root; approximate with the later of the two

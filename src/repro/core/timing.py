@@ -24,12 +24,13 @@ from repro.core.hw import HardwareSpec
 
 @dataclass
 class OpTime:
-    seconds: float
+    seconds: float         # modeled duration, INCLUDING launch overhead
     unit: str              # "mxu" | "vpu" | "hbm" | "ici" | "overhead"
     flops: float
     hbm_bytes: float
     ici_bytes: float = 0.0
     detail: str = ""
+    overhead_s: float = 0.0  # issue-cost portion of ``seconds`` (XLA dispatch)
 
 
 def _dot_dims(mod: SimModule, comp: Computation, op: SimOp):
@@ -58,7 +59,8 @@ def op_time(mod: SimModule, comp: Computation, op: SimOp,
         ct = collective_time(ci["kind"], ci["payload"], ci["group"], hw,
                              inter_pod=ci["group"] > 256)
         return OpTime(ct.seconds + hw.op_launch_overhead_s, "ici",
-                      0.0, hbm, ct.link_bytes, detail=f"g={ci['group']}")
+                      0.0, hbm, ct.link_bytes, detail=f"g={ci['group']}",
+                      overhead_s=hw.op_launch_overhead_s)
 
     dtype = op.outputs[0].dtype if op.outputs else "f32"
     mxu_peak = hw.peak_bf16_flops if dtype in ("bf16", "f16") else hw.peak_f32_flops
@@ -81,4 +83,5 @@ def op_time(mod: SimModule, comp: Computation, op: SimOp,
         return OpTime(0.0, "overhead", 0.0, 0.0)
     total_flops = flops["mxu"] + flops["vpu"] + flops["trans"]
     return OpTime(dur + hw.op_launch_overhead_s, unit, total_flops, hbm,
-                  detail=f"mxu={t_mxu:.2e} vpu={t_vpu:.2e} hbm={t_hbm:.2e}")
+                  detail=f"mxu={t_mxu:.2e} vpu={t_vpu:.2e} hbm={t_hbm:.2e}",
+                  overhead_s=hw.op_launch_overhead_s)

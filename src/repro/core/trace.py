@@ -1,28 +1,44 @@
-"""Timeline export: chrome://tracing JSON + CSV."""
+"""Timeline export: chrome://tracing JSON + CSV.
+
+``op_events`` is the single source of the per-op Trace Event schema; the
+richer exporter in :mod:`repro.analysis.export` layers phase and occupancy
+tracks on top of the same events.
+"""
 from __future__ import annotations
 
 import json
-from typing import List
+from typing import Dict, List
 
 from repro.core.engine import SimReport
 
+#: chrome-trace thread id per bottleneck unit
+LANES: Dict[str, int] = {"mxu": 0, "vpu": 1, "hbm": 2, "ici": 3,
+                         "overhead": 4}
 
-def to_chrome_trace(report: SimReport) -> str:
+
+def op_events(report: SimReport) -> List[dict]:
+    """One ``ph: X`` duration event per timeline entry, laned by unit."""
     events = []
-    lanes = {"mxu": 0, "vpu": 1, "hbm": 2, "ici": 3, "overhead": 4}
     for e in report.timeline:
         events.append({
-            "name": f"{e.opcode}:{e.name}" + (f" x{int(e.scale)}" if e.scale > 1 else ""),
+            "name": f"{e.opcode}:{e.name}"
+                    + (f" x{int(e.scale)}" if e.scale > 1 else ""),
             "cat": e.unit,
             "ph": "X",
             "ts": e.start * 1e6,
             "dur": max(e.duration * e.scale * 1e6, 0.01),
             "pid": 0,
-            "tid": lanes.get(e.unit, 5),
+            "tid": LANES.get(e.unit, 5),
             "args": {"flops": e.flops, "hbm_bytes": e.hbm_bytes,
-                     "ici_bytes": e.ici_bytes, "scale": e.scale},
+                     "ici_bytes": e.ici_bytes, "scale": e.scale,
+                     "overhead_s": e.overhead_s, "comp": e.comp},
         })
-    return json.dumps({"traceEvents": events, "displayTimeUnit": "ns"})
+    return events
+
+
+def to_chrome_trace(report: SimReport) -> str:
+    return json.dumps({"traceEvents": op_events(report),
+                       "displayTimeUnit": "ns"})
 
 
 def to_csv(report: SimReport) -> str:

@@ -24,10 +24,16 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.engine import SimReport, TimelineEntry
 from repro.core.hw import HardwareSpec, V5E
 
-# ops whose access patterns concentrate on few channels (camping)
+# ops whose access patterns concentrate on few channels (camping);
+# single source of truth, shared with repro.analysis.channels
 CAMPING_OPS = ("gather", "scatter", "dynamic-slice", "dynamic-update-slice",
                "sort")
 CAMPING_FRACTION = 0.25    # they hit ~1/4 of the channels
+
+
+def is_camping_op(opcode: str, name: str) -> bool:
+    """Does this op's access pattern concentrate on few HBM channels?"""
+    return any(c in opcode or c in name for c in CAMPING_OPS)
 
 
 @dataclass
@@ -99,7 +105,7 @@ def analyze(report: SimReport, hw: HardwareSpec = V5E,
         t0, t1 = e.start, e.start + span
         b0 = min(int(t0 / width), num_buckets - 1)
         b1 = min(int(t1 / width), num_buckets - 1)
-        camping = any(c in e.opcode or c in e.name for c in CAMPING_OPS)
+        camping = is_camping_op(e.opcode, e.name)
         n_ch = max(int(hw.hbm_channels * (CAMPING_FRACTION if camping else 1.0)), 1)
         for bi in range(b0, b1 + 1):
             b = buckets[bi]

@@ -1,0 +1,22 @@
+"""jax version portability shims for the distributed layer.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to a top-level
+``jax.shard_map`` export (and its replication-check kwarg was renamed
+``check_rep`` -> ``check_vma``) across jax releases.  Callers in this repo
+use the new-style spelling; this module maps it onto whichever jax is
+installed.
+"""
+from __future__ import annotations
+
+try:  # jax >= 0.6: top-level export, kwarg spelled ``check_vma``
+    from jax import shard_map as _shard_map
+    _CHECK_KW = "check_vma"
+except ImportError:  # older jax: experimental module, kwarg is ``check_rep``
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    """Version-portable ``shard_map`` (new-style ``check_vma`` signature)."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_vma})

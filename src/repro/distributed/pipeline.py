@@ -19,7 +19,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.distributed._compat import shard_map
 
 
 def pipeline_apply(stage_fn: Callable, stage_params: Any, x_micro: jax.Array,

@@ -66,7 +66,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    from repro.core.capture import unwrap_cost_analysis
+    cost = unwrap_cost_analysis(compiled.cost_analysis())
     n_dev = mesh_cfg.num_devices
 
     result = {

@@ -1,0 +1,258 @@
+"""repro.analysis tests: bucket conservation, phase segmentation, channel
+camping, exporter schemas, CLI argument plumbing."""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (
+    AnalysisReport, analyze, channel_traffic, label_interval, phase_table,
+    profile_intervals, segment_phases,
+)
+from repro.core import Simulator, V5E, capture
+from repro.core.engine import SimReport, TimelineEntry
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _entry(name, opcode, unit, start, dur, *, scale=1.0, flops=0.0,
+           hbm=0.0, ici=0.0, overhead=0.0):
+    return TimelineEntry(name, opcode, unit, start, dur, scale, flops, hbm,
+                         ici, "entry", overhead_s=overhead)
+
+
+def _synth_report(entries, hw=V5E):
+    """A SimReport whose totals are consistent with its timeline."""
+    unit_seconds = {}
+    for e in entries:
+        unit_seconds[e.unit] = unit_seconds.get(e.unit, 0.0) \
+            + e.duration * e.scale
+    compute = sum(v for u, v in unit_seconds.items() if u != "ici")
+    ici = unit_seconds.get("ici", 0.0)
+    end = max(e.start + e.duration * e.scale for e in entries)
+    return SimReport(
+        total_seconds=end, compute_seconds=compute, ici_seconds=ici,
+        exposed_ici_seconds=max(0.0, ici - compute),
+        unit_seconds=unit_seconds,
+        total_flops=sum(e.flops * e.scale for e in entries),
+        total_hbm_bytes=sum(e.hbm_bytes * e.scale for e in entries),
+        total_ici_bytes=sum(e.ici_bytes * e.scale for e in entries),
+        timeline=entries, hw=hw)
+
+
+def _capture_scan(length=6):
+    def f(x, w):
+        def body(c, wl):
+            return jax.nn.relu(c @ wl), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+    return capture(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                   jax.ShapeDtypeStruct((length, 64, 64), jnp.float32))
+
+
+#: compute -> collective -> bandwidth, 100us each — the canonical 3-phase run
+_THREE_PHASE = [
+    _entry("dot.1", "dot", "mxu", 0e-6, 25e-6, flops=1e9, hbm=1e6,
+           overhead=0.5e-6),
+    _entry("dot.2", "dot", "mxu", 25e-6, 25e-6, flops=1e9, hbm=1e6,
+           overhead=0.5e-6),
+    _entry("dot.3", "dot", "mxu", 50e-6, 50e-6, flops=2e9, hbm=2e6,
+           overhead=0.5e-6),
+    _entry("all-reduce.1", "all-reduce", "ici", 100e-6, 100e-6, ici=8e6,
+           overhead=0.5e-6),
+    _entry("copy.1", "copy", "hbm", 200e-6, 60e-6, hbm=50e6, overhead=0.5e-6),
+    _entry("fusion.1", "fusion", "hbm", 260e-6, 40e-6, flops=1e7, hbm=30e6,
+           overhead=0.5e-6),
+]
+
+
+# ---------------------------------------------------------------------------
+# interval profiler
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("buckets", [1, 7, 50, 200])
+def test_bucket_sums_match_synthetic_totals(buckets):
+    rep = _synth_report(list(_THREE_PHASE))
+    prof = profile_intervals(rep, buckets)
+    assert len(prof.intervals) == buckets
+    assert prof.reconcile() < 1e-9
+    got = prof.totals()
+    assert got["total_flops"] == pytest.approx(rep.total_flops)
+    assert got["total_hbm_bytes"] == pytest.approx(rep.total_hbm_bytes)
+    assert got["unit_mxu_seconds"] == pytest.approx(100e-6)
+    assert got["unit_ici_seconds"] == pytest.approx(100e-6)
+
+
+def test_bucket_sums_match_real_capture():
+    """The acceptance bar: bucketed totals reconcile with summary() < 1%."""
+    sim = Simulator()
+    rep = sim.performance(_capture_scan(8))
+    for buckets in (10, 120):
+        assert profile_intervals(rep, buckets).reconcile() < 0.01
+
+
+def test_trip_count_scaled_entries_conserved():
+    """A while-body entry with scale=k must contribute k iterations' worth."""
+    rep = _synth_report([
+        _entry("body_dot", "dot", "mxu", 0.0, 10e-6, scale=5.0, flops=1e9,
+               hbm=1e6, overhead=0.5e-6)])
+    prof = profile_intervals(rep, 25)
+    got = prof.totals()
+    assert got["total_flops"] == pytest.approx(5e9)
+    assert got["unit_mxu_seconds"] == pytest.approx(50e-6)
+    assert got["launch_overhead_seconds"] == pytest.approx(2.5e-6)
+
+
+def test_interval_occupancy_bounded():
+    rep = _synth_report(list(_THREE_PHASE))
+    for iv in profile_intervals(rep, 30).intervals:
+        for u in ("mxu", "vpu", "hbm", "ici"):
+            assert 0.0 <= iv.occupancy(u) <= 1.0
+        assert iv.ops_per_s >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# phase segmentation
+# ---------------------------------------------------------------------------
+
+def test_phase_segmentation_compute_collective_bandwidth():
+    """The synthetic compute -> collective -> bandwidth run must segment into
+    exactly those three labeled phases, in order."""
+    rep = _synth_report(list(_THREE_PHASE))
+    ar = analyze(rep, num_buckets=60)
+    labels = [p.label for p in ar.phases]
+    assert labels == ["compute-bound", "ici-exposed", "bandwidth-bound"]
+    # boundaries land near 100us / 200us (within a bucket width)
+    width = rep.total_seconds / 60
+    assert abs(ar.phases[0].t1 - 100e-6) <= width
+    assert abs(ar.phases[1].t1 - 200e-6) <= width
+    # per-phase occupancy reflects the dominant unit
+    assert ar.phases[0].occupancy["mxu"] > 0.9
+    assert ar.phases[2].occupancy["hbm"] > 0.9
+    table = phase_table(ar.phases)
+    for lab in labels:
+        assert lab in table
+
+
+def test_launch_overhead_phase_detection():
+    """Tiny ops whose issue cost dominates must label launch-overhead-bound
+    (the paper's Fig. 7 small-kernel discussion)."""
+    tiny = [_entry(f"small.{i}", "fusion", "vpu", i * 0.6e-6, 0.6e-6,
+                   flops=1e3, overhead=0.5e-6) for i in range(50)]
+    ar = analyze(_synth_report(tiny), num_buckets=25)
+    assert {p.label for p in ar.phases} == {"launch-overhead-bound"}
+
+
+def test_short_phase_debounce():
+    """A one-bucket blip between long phases is absorbed, not a phase."""
+    entries = [
+        _entry("dot.1", "dot", "mxu", 0.0, 100e-6, flops=1e9),
+        _entry("copy.blip", "copy", "hbm", 100e-6, 2e-6, hbm=1e6),
+        _entry("dot.2", "dot", "mxu", 102e-6, 100e-6, flops=1e9),
+    ]
+    ar = analyze(_synth_report(entries), num_buckets=50)
+    assert [p.label for p in ar.phases] == ["compute-bound"]
+
+
+# ---------------------------------------------------------------------------
+# HBM channel model
+# ---------------------------------------------------------------------------
+
+def test_channels_balanced_for_contiguous_traffic():
+    rep = _synth_report([
+        _entry("fusion.1", "fusion", "hbm", 0.0, 10e-6, hbm=64e6),
+        _entry("copy.1", "copy", "hbm", 10e-6, 10e-6, hbm=32e6)])
+    ch = channel_traffic(rep)
+    assert ch.imbalance == pytest.approx(1.0)
+    assert ch.camping_bytes == 0.0
+    assert sum(ch.channel_bytes) == pytest.approx(96e6)
+
+
+def test_channels_detect_camping_on_skewed_traffic():
+    """Gather-dominated traffic concentrates on a channel subset -> the
+    imbalance index must flag it (the partition-camping detector)."""
+    rep = _synth_report([
+        _entry("gather.1", "gather", "hbm", 0.0, 10e-6, hbm=64e6),
+        _entry("fusion.1", "fusion", "hbm", 10e-6, 10e-6, hbm=8e6)])
+    ch = channel_traffic(rep)
+    assert ch.imbalance > 1.5
+    assert ch.camping_fraction_of_traffic > 0.5
+    assert sum(ch.channel_bytes) == pytest.approx(72e6)
+    # the hot channel's top contributor is the gather
+    assert ch.hot_contributors[0][0] == "gather.1"
+    assert "hot" in ch.table()
+
+
+def test_channel_hash_deterministic():
+    rep = _synth_report([_entry("gather.7", "gather", "hbm", 0.0, 1e-6,
+                                hbm=1e6)])
+    a = channel_traffic(rep).channel_bytes
+    b = channel_traffic(rep).channel_bytes
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_schema():
+    ar = analyze(_synth_report(list(_THREE_PHASE)), num_buckets=40)
+    doc = json.loads(ar.to_chrome_trace())
+    assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+    phases_seen = 0
+    for ev in doc["traceEvents"]:
+        assert {"name", "ph", "pid"} <= set(ev)
+        if ev["ph"] == "X":
+            assert {"ts", "dur", "tid"} <= set(ev)
+            assert ev["dur"] > 0
+        elif ev["ph"] == "C":
+            assert "ts" in ev and "args" in ev
+        if ev.get("cat") == "phase":
+            phases_seen += 1
+    assert phases_seen == len(ar.phases) >= 3
+
+
+def test_json_export_roundtrip():
+    ar = analyze(_synth_report(list(_THREE_PHASE)), num_buckets=20)
+    doc = json.loads(ar.to_json())
+    assert doc["num_buckets"] == 20
+    assert doc["reconcile_max_rel_error"] < 1e-9
+    assert len(doc["intervals"]) == 20
+    assert [p["label"] for p in doc["phases"]] == \
+        [p.label for p in ar.phases]
+    assert len(doc["channels"]["channel_bytes"]) == V5E.hbm_channels
+
+
+def test_ascii_timeline_renders():
+    ar = analyze(_synth_report(list(_THREE_PHASE)), num_buckets=60)
+    art = ar.ascii_timeline(width=60)
+    assert "phase |" in art and "mxu |" in art and "ici |" in art
+    for glyph in ("C", "I", "B"):   # all three phases visible in the strip
+        assert glyph in art.split("\n")[0]
+
+
+# ---------------------------------------------------------------------------
+# facade + CLI plumbing
+# ---------------------------------------------------------------------------
+
+def test_simulator_facade_and_report_shortcut():
+    sim = Simulator()
+    rep = sim.performance(_capture_scan(6))
+    ar = sim.analysis(rep, num_buckets=30)
+    assert isinstance(ar, AnalysisReport)
+    assert len(ar.profile.intervals) == 30
+    ar2 = rep.analysis(num_buckets=30)
+    assert len(ar2.profile.intervals) == 30
+    assert ar2.reconcile() < 0.01
+
+
+def test_cli_parser():
+    from repro.analysis.__main__ import build_parser
+    args = build_parser().parse_args(
+        ["lenet", "--buckets", "64", "--hw", "tpu-v5p",
+         "--chrome-trace", "/tmp/x.json"])
+    assert args.arch == "lenet" and args.buckets == 64
+    assert args.hw == "tpu-v5p" and args.chrome_trace == "/tmp/x.json"

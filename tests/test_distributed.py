@@ -17,7 +17,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from functools import partial
-from jax import shard_map
+from repro.distributed._compat import shard_map
 
 mesh = jax.make_mesh((4,), ("data",))
 
