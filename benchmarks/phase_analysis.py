@@ -36,21 +36,32 @@ def _workloads():
             jax.ShapeDtypeStruct((8, 512, 512), jnp.bfloat16)))
 
 
-def run(emit):
+def run(emit, smoke: bool = False):
+    """``smoke=True``: first two workloads, fewer buckets — the fast CI mode
+    that still exercises capture -> engine -> analysis end to end (including
+    the conservation assert and the scheduler's serial-chain bound)."""
     sim = Simulator()
     out = {}
-    for name, fn, args in _workloads():
+    workloads = list(_workloads())
+    if smoke:
+        workloads = workloads[:2]
+    for name, fn, args in workloads:
         cap = sim.capture(fn, *args, name=name)
         rep = sim.performance(cap)
-        ar = sim.analysis(rep, num_buckets=100)
+        ar = sim.analysis(rep, num_buckets=40 if smoke else 100)
         err = ar.reconcile()
         assert err < 0.01, f"{name}: bucket totals diverge ({err:.4f})"
+        assert rep.total_seconds <= rep.compute_seconds + rep.ici_seconds \
+            + 1e-12, f"{name}: makespan exceeds the serial-chain bound"
         labels = sorted({p.label for p in ar.phases if p.label != "idle"})
         dom_share = (max(p.seconds for p in ar.phases)
                      / max(rep.total_seconds, 1e-30)) if ar.phases else 0.0
+        crit = max(rep.critical_path_seconds,
+                   key=rep.critical_path_seconds.get) \
+            if rep.critical_path_seconds else "none"
         emit(name, rep.total_seconds * 1e6,
              f"phases={len(ar.phases)};labels={'|'.join(labels)};"
-             f"dom_share={dom_share:.2f};"
+             f"dom_share={dom_share:.2f};crit_unit={crit};"
              f"chan_imbalance={ar.channels.imbalance:.2f};"
              f"overhead_us={rep.launch_overhead_seconds * 1e6:.1f}")
         out[name] = ar
@@ -58,4 +69,6 @@ def run(emit):
 
 
 if __name__ == "__main__":
-    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))
+    import sys
+    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"),
+        smoke="--smoke" in sys.argv)

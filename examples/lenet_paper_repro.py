@@ -91,6 +91,27 @@ def main():
     err = ar.reconcile()
     print(f"  bucket<->summary reconciliation: max rel error {err*100:.3f}%")
     assert err < 0.01, f"bucketed totals diverge from SimReport: {err:.4f}"
+
+    # dataflow-scheduler cross-checks: overlap can only shorten the makespan
+    # relative to the serial chain, the report carries per-unit exposure and
+    # critical-path attribution, and the CTA-style windowed run agrees with
+    # the full run
+    serial_bound = rep.compute_seconds + rep.ici_seconds
+    assert rep.total_seconds <= serial_bound + 1e-12, \
+        "dataflow makespan exceeds the serial-chain baseline"
+    print("  exposed: " + " ".join(
+        f"{u}={s*1e6:.1f}us" for u, s in sorted(rep.exposed_seconds.items())))
+    print("  critical path: " + " ".join(
+        f"{u}={s*1e6:.1f}us"
+        for u, s in sorted(rep.critical_path_seconds.items())))
+    win = sim.performance(cap, window=(0, 40))
+    for key in ("total_flops", "total_hbm_bytes", "launch_overhead_seconds",
+                "total_seconds"):
+        full_v, win_v = getattr(rep, key), getattr(win, key)
+        assert abs(full_v - win_v) <= 0.01 * max(abs(full_v), 1e-30), \
+            f"windowed run diverges from full run on {key}"
+    print(f"  windowed run (40 detailed ops) matches full totals "
+          f"({len(win.timeline)} vs {len(rep.timeline)} timeline entries)")
     distinct = {p.label for p in ar.phases if p.label != "idle"}
     assert len(ar.phases) >= 2 and distinct, (
         "phase segmentation found too few phases")

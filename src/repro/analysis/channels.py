@@ -15,7 +15,9 @@ first-order channel-hash model over ``hw.hbm_channels``:
 
 ``imbalance`` = hottest-channel bytes / mean-channel bytes; 1.0 is perfectly
 balanced, and anything well above ~1.5 means a minority of channels gates the
-effective bandwidth.
+effective bandwidth.  The detector reads only per-op BYTES (never start
+times), so it is unaffected by how much the dataflow scheduler overlaps the
+timeline.
 """
 from __future__ import annotations
 

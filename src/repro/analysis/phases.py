@@ -14,6 +14,12 @@ and attaches one of four labels:
   time (tiny ops: the paper's Fig. 7 LRN/CGEMM launch-overhead discussion);
 * ``idle``                   — nothing scheduled in the bucket.
 
+The dataflow scheduler may run several units concurrently inside one bucket
+(compute/collective overlap, multi-stream dispatch); the dominant-unit vote
+still picks the unit with the most busy time, and the ``ici-exposed`` label
+only wins a bucket when collective time actually outweighs the compute it
+could hide behind — consistent with ``SimReport.exposed_seconds``.
+
 Runs of identically-labeled buckets become :class:`Phase` records; runs
 shorter than ``min_intervals`` are absorbed into their longer neighbor so
 quantization noise at bucket edges does not fragment the segmentation.

@@ -32,9 +32,10 @@ from repro.core.vision import VisionReport, analyze as vision_analyze
 class Simulator:
     """One-stop facade over capture/engine/vision/power/correlate."""
 
-    def __init__(self, hw: HardwareSpec = V5E, overlap_collectives: bool = True):
+    def __init__(self, hw: HardwareSpec = V5E, overlap_collectives: bool = True,
+                 num_compute_streams: int = 1):
         self.hw = hw
-        self.engine = Engine(hw, overlap_collectives)
+        self.engine = Engine(hw, overlap_collectives, num_compute_streams)
 
     def capture(self, fn, *abstract_args, **kw) -> Captured:
         return capture(fn, *abstract_args, **kw)

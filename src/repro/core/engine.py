@@ -1,16 +1,33 @@
 """Event-driven timeline engine (the Performance-simulation mode of the paper).
 
-Walks the entry computation as a dataflow graph with two schedulable
-resources — the compute core (MXU/VPU/HBM, serial like a TPU TensorCore) and
-the ICI fabric — and list-schedules ops ASAP under data dependencies.
-Collectives run on the ICI resource and therefore OVERLAP with compute when
-dependencies allow (the compute/comm-overlap distributed-optimization trick:
-exposed vs hidden collective time is reported separately).
+Walks the entry computation as a true dataflow graph and *list-schedules*
+every op ASAP at ``max(operand-ready, resource-free)`` over independent
+per-resource free times — MXU, VPU, HBM, the per-op issue ("overhead") slot,
+and the ICI fabric — plus a configurable number of compute *streams* that
+model dispatch concurrency:
 
-While-loops are simulated once per body and scaled by trip count; the timeline
-stores one representative iteration (cheap) plus the scale factor (the same
-trick as the paper's CTA-window checkpointing: simulate a window in detail,
-extrapolate the rest).
+* ``num_compute_streams=1`` (default): compute ops serialize among
+  themselves like a TPU TensorCore, but collectives still overlap with
+  compute when dependencies allow;
+* ``num_compute_streams>1``: independent compute ops may also overlap
+  (async-dispatch scenarios), still serializing per bottleneck unit.
+
+Dependencies come from each :class:`SimOp`'s operands (the def-use edges
+:mod:`repro.core.hlo_ir` exposes), so producer/consumer ordering, while-loop
+carried dependences and trailing-collective results are all honored — a
+consumer of a collective waits for the collective, not for the compute chain.
+
+While-loops are simulated once per body and scaled by trip count; the
+timeline stores one representative iteration (cheap) plus the scale factor
+(the same trick as the paper's CTA-window checkpointing: simulate a window in
+detail, extrapolate the rest).  The ``window=`` fast-forward flows through
+the same scheduler, so windowed and full runs agree on totals (including the
+launch-overhead tax).
+
+Beyond busy totals, the schedule yields per-unit *exposed* seconds (span
+where only that unit is active — the generalization of exposed-collective
+time) and per-unit *critical-path* seconds (time attributed to each unit
+along the binding-constraint chain that determines the makespan).
 """
 from __future__ import annotations
 
@@ -26,6 +43,12 @@ from repro.core.timing import OpTime, op_time
 SKIP_OPS = ("parameter", "constant", "tuple", "get-tuple-element", "bitcast",
             "after-all", "partition-id", "replica-id", "domain",
             "opt-barrier")
+
+#: schedulable resources with independent free times ("overhead" is the
+#: issue slot zero-work ops occupy; "ici" is the interconnect fabric).
+#: The single source of truth — repro.analysis conserves per-resource
+#: busy time against exactly this set.
+RESOURCES = ("mxu", "vpu", "hbm", "overhead", "ici")
 
 
 @dataclass
@@ -49,6 +72,17 @@ class TimelineEntry:
     ici_bytes: float        # per-iteration interconnect traffic [bytes]
     comp: str = ""          # enclosing HLO computation name
     overhead_s: float = 0.0  # issue/launch-cost portion of ``duration`` [s]
+    exposed_s: float = 0.0   # wall-clock span where this op's unit ran alone
+
+
+@dataclass
+class _Node:
+    """Critical-path bookkeeping for one scheduled (or fast-forwarded) op."""
+
+    unit: str
+    seconds: float           # duration * scale: wall-clock contribution
+    finish: float
+    pred: Optional[str]      # node id of the constraint that set our start
 
 
 @dataclass
@@ -71,6 +105,15 @@ class SimReport:
     total_ici_bytes: float        # ICI traffic [bytes] (trip-count scaled)
     timeline: List[TimelineEntry]
     hw: HardwareSpec = V5E
+    #: per-unit span where ONLY that unit was active — the generalization of
+    #: exposed-collective time: shrinking an exposed unit shortens the run
+    exposed_seconds: Dict[str, float] = field(default_factory=dict)
+    #: per-unit seconds along the binding-constraint chain ending at the
+    #: makespan — which unit the run's length is actually charged to
+    critical_path_seconds: Dict[str, float] = field(default_factory=dict)
+    #: issue cost of ops fast-forwarded outside a ``window=`` run (they carry
+    #: no timeline entry, so the property below adds this explicitly)
+    ff_overhead_seconds: float = 0.0
 
     @property
     def mfu(self) -> float:
@@ -86,8 +129,13 @@ class SimReport:
 
     @property
     def launch_overhead_seconds(self) -> float:
-        """Total per-op issue cost — the paper's kernel-launch-overhead tax."""
-        return sum(e.overhead_s * e.scale for e in self.timeline)
+        """Total per-op issue cost — the paper's kernel-launch-overhead tax.
+
+        Includes ops fast-forwarded by ``window=`` (via
+        ``ff_overhead_seconds``), so windowed and full runs agree.
+        """
+        return (sum(e.overhead_s * e.scale for e in self.timeline)
+                + self.ff_overhead_seconds)
 
     def analysis(self, num_buckets: int = 120):
         """Phase-analysis view of this report (see :mod:`repro.analysis`)."""
@@ -107,120 +155,299 @@ class SimReport:
             "total_ici_bytes": self.total_ici_bytes,
             "launch_overhead_seconds": self.launch_overhead_seconds,
             **{f"unit_{k}_seconds": v for k, v in self.unit_seconds.items()},
+            **{f"exposed_{k}_seconds": v
+               for k, v in self.exposed_seconds.items()},
+            **{f"critical_path_{k}_seconds": v
+               for k, v in self.critical_path_seconds.items()},
         }
 
 
 class Engine:
-    def __init__(self, hw: HardwareSpec = V5E, overlap_collectives: bool = True):
+    """Dataflow list scheduler over per-unit resources.
+
+    ``overlap_collectives=False`` makes every collective a barrier across
+    ALL compute streams (fully serial, the paper's no-async baseline);
+    ``num_compute_streams`` sets dispatch concurrency for compute ops
+    (1 = serial TensorCore).
+    """
+
+    def __init__(self, hw: HardwareSpec = V5E, overlap_collectives: bool = True,
+                 num_compute_streams: int = 1):
+        if num_compute_streams < 1:
+            raise ValueError(
+                f"num_compute_streams must be >= 1, got {num_compute_streams}")
         self.hw = hw
         self.overlap = overlap_collectives
+        self.num_compute_streams = num_compute_streams
 
     # ------------------------------------------------------------------
     def simulate(self, mod: SimModule, window: Optional[Tuple[int, int]] = None
                  ) -> SimReport:
         """window=(start_idx, end_idx): detailed-simulate only ops in the
         window (by flat index over the entry walk), fast-forwarding the rest
-        analytically — the op-level analogue of the paper's CTA checkpoint."""
+        analytically — the op-level analogue of the paper's CTA checkpoint.
+        Fast-forwarded ops flow through the same scheduler (they advance the
+        same resource clocks and are fully accounted), they just carry no
+        timeline entry."""
+        if mod.entry is None:
+            raise ValueError("module has no entry computation")
+
         timeline: List[TimelineEntry] = []
         unit_seconds: Dict[str, float] = {}
         tot = {"flops": 0.0, "hbm": 0.0, "ici": 0.0}
-        compute_free = 0.0      # next time the compute core is free
-        ici_free = 0.0
-        ready: Dict[str, float] = {}   # op name -> data-ready time
-        exposed_ici = 0.0
-        idx = 0
+        unit_free: Dict[str, float] = {u: 0.0 for u in RESOURCES}
+        unit_last: Dict[str, Optional[str]] = {u: None for u in RESOURCES}
+        streams: List[float] = [0.0] * self.num_compute_streams
+        stream_last: List[Optional[str]] = [None] * self.num_compute_streams
+        #: (comp name, op name) -> (value-ready time, binding crit node)
+        ready: Dict[Tuple[str, str], Tuple[float, Optional[str]]] = {}
+        nodes: Dict[str, _Node] = {}
+        state = {"idx": 0, "ff_overhead": 0.0, "ninv": 0,
+                 "makespan": 0.0, "makespan_node": None}
+        #: (start, wall span, unit) of fast-forwarded ops: no timeline entry,
+        #: but the exposure sweep still needs their occupancy
+        ff_spans: List[Tuple[float, float, str]] = []
 
-        def run_comp(comp_name: str, scale: float, t_base: float) -> float:
-            nonlocal compute_free, ici_free, exposed_ici, idx
+        def bump_makespan(t: float, node: Optional[str]):
+            if t > state["makespan"]:
+                state["makespan"] = t
+                state["makespan_node"] = node
+
+        def dep_ready(comp_name: str, op: SimOp, t_base: float,
+                      base_pred: Optional[str]) -> Tuple[float, Optional[str]]:
+            """Latest operand-ready time and the crit node that binds it."""
+            t, pred = t_base, base_pred
+            for name in op.operands:
+                r = ready.get((comp_name, name))
+                if r is not None and r[0] > t:
+                    t, pred = r
+            return t, pred
+
+        def schedule(node_id: str, unit: str, seconds: float, scale: float,
+                     dep_t: float, dep_pred: Optional[str], use_stream: bool,
+                     barrier: bool = False) -> Tuple[float, float]:
+            """ASAP list-scheduling: start at max(operand-ready, unit-free
+            [, stream-free]); claim the unit (and stream) until finish.
+
+            ``barrier=True`` (non-overlapped collectives): wait for EVERY
+            stream and hold them all until finish — with multiple streams a
+            collective must not run beside compute on another stream, or
+            ``overlap_collectives=False`` would be silently ignored."""
+            cands = [(dep_t, dep_pred), (unit_free[unit], unit_last[unit])]
+            si = None
+            if barrier:
+                bi = max(range(len(streams)), key=streams.__getitem__)
+                cands.append((streams[bi], stream_last[bi]))
+            elif use_stream:
+                si = min(range(len(streams)), key=streams.__getitem__)
+                cands.append((streams[si], stream_last[si]))
+            start, pred = max(cands, key=lambda c: c[0])
+            finish = start + seconds
+            unit_free[unit] = finish
+            unit_last[unit] = node_id
+            if barrier:
+                for i in range(len(streams)):
+                    streams[i] = finish
+                    stream_last[i] = node_id
+            elif si is not None:
+                streams[si] = finish
+                stream_last[si] = node_id
+            nodes[node_id] = _Node(unit, seconds * scale, finish, pred)
+            bump_makespan(finish, node_id)
+            return start, finish
+
+        def run_comp(comp_name: str, scale: float, t_base: float,
+                     base_pred: Optional[str]) -> Tuple[float, Optional[str]]:
+            """Schedule one computation; returns when its ROOT value is ready
+            (a trailing collective's result included — callers must not
+            proceed before it)."""
             comp = mod.computations[comp_name]
-            local_end = t_base
+            # invocation serial: a computation invoked twice (two call sites)
+            # must not overwrite the first invocation's crit-path nodes
+            inv = state["ninv"]
+            state["ninv"] += 1
+            last: Tuple[float, Optional[str]] = (t_base, base_pred)
             for op in comp.ops:
+                key = (comp_name, op.name)
                 if op.opcode in SKIP_OPS:
+                    # zero-cost dataflow plumbing: propagate readiness
+                    ready[key] = dep_ready(comp_name, op, t_base, base_pred)
                     continue
                 if op.opcode == "while":
-                    trip = mod.trip_count(op)
-                    b = _BODY_RE.search(op.raw)
-                    if b and b.group(1) in mod.computations:
-                        # simulate ONE iteration, scale the cost
-                        t0 = max(compute_free, ici_free)
-                        t1 = run_comp(b.group(1), scale * trip, t0)
-                        iter_time = t1 - t0
-                        extra = iter_time * (trip - 1)
-                        compute_free = max(compute_free, t1) + extra
-                        ici_free = min(ici_free, compute_free)
-                        local_end = compute_free
+                    ready[key] = run_while(comp_name, op, scale, t_base,
+                                           base_pred)
+                    last = max(last, ready[key], key=lambda r: r[0])
                     continue
                 if op.opcode == "call":
                     c = _TO_APPLY_RE.search(op.raw) or _CALLS_RE.search(op.raw)
                     if c and c.group(1) in mod.computations:
-                        local_end = run_comp(c.group(1), scale, local_end)
+                        d, dpred = dep_ready(comp_name, op, t_base, base_pred)
+                        ready[key] = run_comp(c.group(1), scale, d, dpred)
+                        last = max(last, ready[key], key=lambda r: r[0])
                         continue
-                idx += 1
-                if window and not (window[0] <= idx < window[1]):
-                    # fast-forward: charge analytic time without timeline entry
-                    ot = op_time(mod, comp, op, self.hw)
-                    if ot.unit == "ici":
-                        ici_free = max(ici_free, local_end) + ot.seconds
-                    else:
-                        compute_free = max(compute_free, local_end) + ot.seconds
-                        local_end = compute_free
-                    self._account(ot, scale, tot, unit_seconds)
-                    continue
+                state["idx"] += 1
                 ot = op_time(mod, comp, op, self.hw)
-                dep_ready = local_end
-                if ot.unit == "ici" and self.overlap:
-                    start = max(ici_free, dep_ready)
-                    ici_free = start + ot.seconds
-                    # exposure: how much the collective delays compute beyond
-                    # what compute had available
-                    exposed = max(0.0, ici_free - max(compute_free, dep_ready))
-                    exposed_ici += exposed * scale
-                    local_end = max(local_end, dep_ready)
+                d, dpred = dep_ready(comp_name, op, t_base, base_pred)
+                node_id = f"{inv}:{comp_name}/{op.name}"
+                on_ici = ot.unit == "ici"
+                use_stream = not on_ici
+                barrier = on_ici and not self.overlap
+                start, _ = schedule(node_id, ot.unit, ot.seconds, scale,
+                                    d, dpred, use_stream, barrier)
+                if window and not (window[0] <= state["idx"] < window[1]):
+                    # fast-forward: same clocks advanced, no timeline entry
+                    state["ff_overhead"] += ot.overhead_s * scale
+                    ff_spans.append((start, ot.seconds * scale, ot.unit))
                 else:
-                    start = max(compute_free, dep_ready,
-                                ici_free if ot.unit == "ici" else 0.0)
-                    compute_free = start + ot.seconds
-                    local_end = compute_free
-                timeline.append(TimelineEntry(
-                    op.name, op.opcode, ot.unit, start, ot.seconds, scale,
-                    ot.flops, ot.hbm_bytes, ot.ici_bytes, comp_name,
-                    overhead_s=ot.overhead_s))
+                    timeline.append(TimelineEntry(
+                        op.name, op.opcode, ot.unit, start, ot.seconds, scale,
+                        ot.flops, ot.hbm_bytes, ot.ici_bytes, comp_name,
+                        overhead_s=ot.overhead_s))
                 self._account(ot, scale, tot, unit_seconds)
-            # a computation's result is ready when both resources settle for
-            # its root; approximate with the later of the two
-            return max(local_end, ici_free if not self.overlap else local_end)
+                ready[key] = (nodes[node_id].finish, node_id)
+                last = max(last, ready[key], key=lambda r: r[0])
+            if comp.root is not None and (comp_name, comp.root) in ready:
+                return ready[(comp_name, comp.root)]
+            return last
 
-        if mod.entry is None:
-            raise ValueError("module has no entry computation")
-        end = run_comp(mod.entry, 1.0, 0.0)
-        end = max(end, ici_free)
+        def run_while(comp_name: str, op: SimOp, scale: float, t_base: float,
+                      base_pred: Optional[str]) -> Tuple[float, Optional[str]]:
+            """One detailed iteration, then scale: resources the body used
+            are pushed FORWARD by (trip-1) iterations — never backward (a
+            later collective can never schedule in the past).
 
-        compute_seconds = sum(e.duration * e.scale for e in timeline
-                              if e.unit != "ici")
-        ici_seconds = sum(e.duration * e.scale for e in timeline
-                          if e.unit == "ici")
-        # overlap model: collectives hide behind compute up to the compute
-        # budget (async collectives + double buffering); what can't hide is
-        # exposed.  total = max(compute, ici) is the overlapped bound,
-        # compute+ici the serial bound.
-        if self.overlap:
-            exposed_ici = max(0.0, ici_seconds - compute_seconds)
-            total = max(compute_seconds, ici_seconds)
-        else:
-            exposed_ici = ici_seconds
-            total = compute_seconds + ici_seconds
+            Loop entry is a scheduling BARRIER: the body starts once its
+            operands AND every resource are available, so the pre-loop
+            busy-wait is paid exactly once (not repaid per trip) and no body
+            work is ever dropped from the per-iteration cost — ``iter_time``
+            measures a clean-slate iteration."""
+            d, dpred = dep_ready(comp_name, op, t_base, base_pred)
+            trip = mod.trip_count(op)
+            b = _BODY_RE.search(op.raw)
+            if not (b and b.group(1) in mod.computations):
+                return d, dpred
+            t0, pred0 = max(
+                [(d, dpred)]
+                + [(unit_free[u], unit_last[u]) for u in RESOURCES]
+                + [(streams[i], stream_last[i])
+                   for i in range(len(streams))],
+                key=lambda c: c[0])
+            snap_units = dict(unit_free)
+            snap_streams = list(streams)
+            t1, rpred = run_comp(b.group(1), scale * trip, t0, pred0)
+            # iterations serialize on the loop-carried dependence, so the
+            # body's resources stay busy for the remaining trips
+            t1_res = max([t1]
+                         + [t for u, t in unit_free.items()
+                            if t > snap_units[u]]
+                         + [t for i, t in enumerate(streams)
+                            if t > snap_streams[i]])
+            iter_time = max(t1_res - t0, 0.0)
+            extra = iter_time * (trip - 1)
+            for u in RESOURCES:
+                if unit_free[u] > snap_units[u]:
+                    unit_free[u] += extra
+            for i in range(len(streams)):
+                if streams[i] > snap_streams[i]:
+                    streams[i] += extra
+            t_end = t1_res + extra
+            bump_makespan(t_end, rpred)
+            return t_end, rpred
+
+        root_t, _root_pred = run_comp(mod.entry, 1.0, 0.0, None)
+        bump_makespan(root_t, _root_pred)
+        total = state["makespan"]
+
+        # busy totals come from the same accounting as unit_seconds so they
+        # include fast-forwarded ops — windowed and full runs agree
+        compute_seconds = sum(v for u, v in unit_seconds.items()
+                              if u != "ici")
+        ici_seconds = unit_seconds.get("ici", 0.0)
+        exposed = self._exposure(timeline, ff_spans)
+        critical_path = self._critical_path(nodes, state["makespan_node"])
         return SimReport(
             total_seconds=total,
             compute_seconds=compute_seconds,
             ici_seconds=ici_seconds,
-            exposed_ici_seconds=exposed_ici if self.overlap else ici_seconds,
+            exposed_ici_seconds=exposed.get("ici", 0.0),
             unit_seconds=unit_seconds,
             total_flops=tot["flops"],
             total_hbm_bytes=tot["hbm"],
             total_ici_bytes=tot["ici"],
             timeline=timeline,
             hw=self.hw,
+            exposed_seconds=exposed,
+            critical_path_seconds=critical_path,
+            ff_overhead_seconds=state["ff_overhead"],
         )
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _exposure(timeline: List[TimelineEntry],
+                  ff_spans: Tuple = ()) -> Dict[str, float]:
+        """Per-unit seconds during which ONLY that unit was active.
+
+        A coordinate sweep over the scheduled spans — timeline entries plus
+        the fast-forwarded ``(start, span, unit)`` spans of a windowed run,
+        so exposure agrees between windowed and full runs.  Each single-unit
+        segment is also attributed back to the covering *entries'*
+        ``exposed_s`` (split evenly when trip-scaled spans overlap), so the
+        per-op figure is exact on the overlapped timeline.
+        """
+        spans: List[Tuple[float, float, str, Optional[TimelineEntry]]] = [
+            (e.start, e.duration * e.scale, e.unit, e) for e in timeline]
+        spans += [(s, w, u, None) for (s, w, u) in ff_spans]
+        events: List[Tuple[float, int, int]] = []
+        for i, (s, w, _u, _e) in enumerate(spans):
+            if w <= 0:
+                continue
+            events.append((s, 1, i))
+            events.append((s + w, 0, i))
+        # process ends before starts at equal times so back-to-back ops on
+        # different units don't create a fake multi-unit instant
+        events.sort(key=lambda ev: (ev[0], ev[1]))
+        exposed: Dict[str, float] = {}
+        active: Dict[int, None] = {}
+        prev_t = 0.0
+        for t, kind, i in events:
+            if active and t > prev_t:
+                units = {spans[j][2] for j in active}
+                if len(units) == 1:
+                    seg = t - prev_t
+                    u = next(iter(units))
+                    exposed[u] = exposed.get(u, 0.0) + seg
+                    # the per-op split goes only to spans that HAVE an entry
+                    # (fast-forwarded spans count toward the aggregate but
+                    # carry no op to attribute to)
+                    recipients = [spans[j][3] for j in active
+                                  if spans[j][3] is not None]
+                    if recipients:
+                        share = seg / len(recipients)
+                        for e in recipients:
+                            e.exposed_s += share
+            if kind == 1:
+                active[i] = None
+            else:
+                active.pop(i, None)
+            prev_t = t
+        return exposed
+
+    @staticmethod
+    def _critical_path(nodes: Dict[str, _Node], end_node: Optional[str]
+                       ) -> Dict[str, float]:
+        """Walk the binding-constraint chain back from the makespan,
+        attributing each node's wall-clock contribution to its unit."""
+        cp: Dict[str, float] = {}
+        seen = set()
+        cur = end_node
+        while cur is not None and cur not in seen:
+            seen.add(cur)
+            n = nodes.get(cur)
+            if n is None:
+                break
+            cp[n.unit] = cp.get(n.unit, 0.0) + n.seconds
+            cur = n.pred
+        return cp
 
     @staticmethod
     def _account(ot: OpTime, scale: float, tot: Dict[str, float],

@@ -103,6 +103,35 @@ class Computation:
         if is_root:
             self.root = op.name
 
+    # -- def-use structure (the scheduler's dependency graph) ---------------
+    def deps(self, op: SimOp) -> List[SimOp]:
+        """Producer ops of ``op``'s operands defined in this computation.
+
+        Operand tokens that do not name an op here (cross-computation
+        references, literals) are dropped — the caller decides what those
+        mean (e.g. the engine treats a called computation's parameters as
+        ready at the call site's dispatch time).
+        """
+        out = []
+        for name in op.operands:
+            p = self.by_name.get(name)
+            if p is not None:
+                out.append(p)
+        return out
+
+    def def_use_edges(self) -> Dict[str, List[str]]:
+        """producer name -> consumer names, in program order.
+
+        The forward view of :meth:`deps`; exposed so analyses (and tests)
+        can reason about the dataflow graph without re-deriving it from
+        operand lists.
+        """
+        uses: Dict[str, List[str]] = {op.name: [] for op in self.ops}
+        for op in self.ops:
+            for p in self.deps(op):
+                uses[p.name].append(op.name)
+        return uses
+
 
 # instruction line: [ROOT] %name = TYPE opcode(...operands...), attrs
 _INST_RE = re.compile(

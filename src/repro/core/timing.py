@@ -80,7 +80,11 @@ def op_time(mod: SimModule, comp: Computation, op: SimOp,
     unit = max(times, key=times.get)
     dur = max(times.values())
     if dur <= 0:
-        return OpTime(0.0, "overhead", 0.0, 0.0)
+        # zero-work ops still pay the documented fixed issue cost (XLA
+        # dispatch) — exactly the launch-overhead tax that dominates tiny
+        # kernels in the paper's Fig. 7, so they must occupy timeline span
+        return OpTime(hw.op_launch_overhead_s, "overhead", 0.0, 0.0,
+                      overhead_s=hw.op_launch_overhead_s)
     total_flops = flops["mxu"] + flops["vpu"] + flops["trans"]
     return OpTime(dur + hw.op_launch_overhead_s, unit, total_flops, hbm,
                   detail=f"mxu={t_mxu:.2e} vpu={t_vpu:.2e} hbm={t_hbm:.2e}",

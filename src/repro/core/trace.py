@@ -31,7 +31,8 @@ def op_events(report: SimReport) -> List[dict]:
             "tid": LANES.get(e.unit, 5),
             "args": {"flops": e.flops, "hbm_bytes": e.hbm_bytes,
                      "ici_bytes": e.ici_bytes, "scale": e.scale,
-                     "overhead_s": e.overhead_s, "comp": e.comp},
+                     "overhead_s": e.overhead_s, "exposed_s": e.exposed_s,
+                     "comp": e.comp},
         })
     return events
 

@@ -1,0 +1,446 @@
+"""Dataflow-scheduler tests: hand-built dependency diamonds with makespans
+computed by hand, regression tests for the ICI time-travel / call-return /
+window-overhead scheduling bugs, and the reconcile property on overlapped
+timelines."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import analyze, profile_intervals
+from repro.core import Engine, V5E, capture, parse_hlo_module
+from repro.core.engine import TimelineEntry
+from repro.core.hlo_ir import Shape, SimOp
+from repro.core.timing import op_time
+
+# ---------------------------------------------------------------------------
+# hand-built HLO modules
+# ---------------------------------------------------------------------------
+
+#: diamond: p0 -> (dot.a [mxu] || exp.b [hbm]) -> add.j — the two branches
+#: are independent, so with 2 compute streams they overlap
+_DIAMOND = """
+ENTRY %main (p0: f32[1024,1024]) -> f32[1024,1024] {
+  %p0 = f32[1024,1024]{1,0} parameter(0)
+  %dot.a = f32[1024,1024]{1,0} dot(%p0, %p0), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %exp.b = f32[1024,1024]{1,0} exponential(%p0)
+  ROOT %add.j = f32[1024,1024]{1,0} add(%dot.a, %exp.b)
+}
+"""
+
+#: big collective -> tiny while -> second collective: with the old
+#: `ici_free = min(ici_free, compute_free)` the while pulled the ICI clock
+#: backward and %ar2 scheduled in the past, overlapping %ar1 on the fabric
+_WHILE_THEN_COLLECTIVE = """
+%addc (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+
+%cond (c0: (s32[], f32[4096,4096])) -> pred[] {
+  %c0 = (s32[], f32[4096,4096]) parameter(0)
+  %it = s32[] get-tuple-element(%c0), index=0
+  %lim = s32[] constant(3)
+  ROOT %lt = pred[] compare(%it, %lim), direction=LT
+}
+
+%body (b0: (s32[], f32[4096,4096])) -> (s32[], f32[4096,4096]) {
+  %b0 = (s32[], f32[4096,4096]) parameter(0)
+  %bit = s32[] get-tuple-element(%b0), index=0
+  %bone = s32[] constant(1)
+  %binc = s32[] add(%bit, %bone)
+  %bx = f32[4096,4096]{1,0} get-tuple-element(%b0), index=1
+  ROOT %btup = (s32[], f32[4096,4096]) tuple(%binc, %bx)
+}
+
+ENTRY %main (p0: f32[4096,4096]) -> f32[4096,4096] {
+  %p0 = f32[4096,4096]{1,0} parameter(0)
+  %ar1 = f32[4096,4096]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%addc
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[4096,4096]) tuple(%zero, %ar1)
+  %w = (s32[], f32[4096,4096]) while(%init), condition=%cond, body=%body
+  %res = f32[4096,4096]{1,0} get-tuple-element(%w), index=1
+  ROOT %ar2 = f32[4096,4096]{1,0} all-reduce(%res), replica_groups={{0,1,2,3}}, to_apply=%addc
+}
+"""
+
+#: a call whose ROOT is a collective: the caller's consumer must wait for
+#: the collective's result, not just the compute chain
+_CALL_ROOT_COLLECTIVE = """
+%addc (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+
+%coll (cp: f32[2048,2048]) -> f32[2048,2048] {
+  %cp = f32[2048,2048]{1,0} parameter(0)
+  ROOT %car = f32[2048,2048]{1,0} all-reduce(%cp), replica_groups={{0,1,2,3}}, to_apply=%addc
+}
+
+ENTRY %main (p0: f32[2048,2048]) -> f32[2048,2048] {
+  %p0 = f32[2048,2048]{1,0} parameter(0)
+  %cc = f32[2048,2048]{1,0} call(%p0), to_apply=%coll
+  ROOT %dd = f32[2048,2048]{1,0} dot(%cc, %cc), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def _entry_span(e: TimelineEntry) -> float:
+    return e.start + e.duration * e.scale
+
+
+def _by_name(report, name):
+    return next(e for e in report.timeline if e.name == name)
+
+
+def _capture_scan(length=6):
+    def f(x, w):
+        def body(c, wl):
+            return jax.nn.relu(c @ wl), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+    return capture(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                   jax.ShapeDtypeStruct((length, 64, 64), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# def-use edges (the scheduler's dependency graph)
+# ---------------------------------------------------------------------------
+
+def test_def_use_edges():
+    mod = parse_hlo_module(_DIAMOND)
+    comp = mod.computations[mod.entry]
+    uses = comp.def_use_edges()
+    assert sorted(uses["p0"]) == ["dot.a", "dot.a", "exp.b"]
+    assert uses["dot.a"] == ["add.j"] and uses["exp.b"] == ["add.j"]
+    assert [d.name for d in comp.deps(comp.by_name["add.j"])] == \
+        ["dot.a", "exp.b"]
+
+
+# ---------------------------------------------------------------------------
+# tentpole: diamond makespan, by hand
+# ---------------------------------------------------------------------------
+
+def _diamond_durations():
+    mod = parse_hlo_module(_DIAMOND)
+    comp = mod.computations[mod.entry]
+    d = {n: op_time(mod, comp, comp.by_name[n], V5E)
+         for n in ("dot.a", "exp.b", "add.j")}
+    assert d["dot.a"].unit == "mxu"       # the branches occupy distinct units
+    assert d["exp.b"].unit != d["dot.a"].unit
+    return mod, {n: t.seconds for n, t in d.items()}
+
+
+def test_diamond_serial_stream_makespan():
+    """One compute stream: the three ops chain back-to-back."""
+    mod, dur = _diamond_durations()
+    rep = Engine(num_compute_streams=1).simulate(mod)
+    assert rep.total_seconds == pytest.approx(
+        dur["dot.a"] + dur["exp.b"] + dur["add.j"], rel=1e-9)
+
+
+def test_diamond_overlapped_makespan_by_hand():
+    """Two streams: branches overlap, join waits for the slower branch —
+    makespan = max(d_dot, d_exp) + d_add, computed by hand."""
+    mod, dur = _diamond_durations()
+    rep = Engine(num_compute_streams=2).simulate(mod)
+    expect = max(dur["dot.a"], dur["exp.b"]) + dur["add.j"]
+    assert rep.total_seconds == pytest.approx(expect, rel=1e-9)
+    # the join must start exactly when the slower branch finishes
+    join = _by_name(rep, "add.j")
+    assert join.start == pytest.approx(max(dur["dot.a"], dur["exp.b"]),
+                                       rel=1e-9)
+    # overlap can only shorten relative to the serial stream
+    serial = Engine(num_compute_streams=1).simulate(mod)
+    assert rep.total_seconds < serial.total_seconds
+    # and never beats the busy-time bound of the slowest chain
+    assert rep.total_seconds <= serial.compute_seconds + 1e-15
+
+
+def test_diamond_critical_path_and_exposure():
+    mod, dur = _diamond_durations()
+    rep = Engine(num_compute_streams=2).simulate(mod)
+    cp = rep.critical_path_seconds
+    # critical path = slower branch + join; it accounts the whole makespan
+    assert sum(cp.values()) == pytest.approx(rep.total_seconds, rel=1e-9)
+    long_branch = "dot.a" if dur["dot.a"] >= dur["exp.b"] else "exp.b"
+    assert cp[_by_name(rep, long_branch).unit] > 0
+    # exposure: the slower branch runs alone after the faster one ends
+    gap = abs(dur["dot.a"] - dur["exp.b"])
+    assert rep.exposed_seconds[_by_name(rep, long_branch).unit] == \
+        pytest.approx(gap + (dur["add.j"]
+                             if _by_name(rep, "add.j").unit
+                             == _by_name(rep, long_branch).unit else 0.0),
+                      rel=1e-9)
+    assert _by_name(rep, long_branch).exposed_s == pytest.approx(gap, rel=1e-9)
+
+
+def test_exposure_sweep_hand_case():
+    """mxu [0,10us) and ici [5us,20us): 5us of each is exposed, the 5us of
+    overlap belongs to neither."""
+    entries = [
+        TimelineEntry("a", "dot", "mxu", 0.0, 10e-6, 1.0, 0, 0, 0),
+        TimelineEntry("b", "all-reduce", "ici", 5e-6, 15e-6, 1.0, 0, 0, 0),
+    ]
+    exposed = Engine._exposure(entries)
+    assert exposed["mxu"] == pytest.approx(5e-6)
+    assert exposed["ici"] == pytest.approx(10e-6)
+    assert entries[0].exposed_s == pytest.approx(5e-6)
+    assert entries[1].exposed_s == pytest.approx(10e-6)
+
+
+#: loop body with real work (dot -> all-reduce) behind an unrelated long
+#: collective: the pre-loop ICI busy-wait must be paid once, and NO body
+#: work may be dropped from the per-iteration cost
+_BUSY_ICI_THEN_WHILE = """
+%addc (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+
+%cond (c0: (s32[], f32[1024,1024])) -> pred[] {
+  %c0 = (s32[], f32[1024,1024]) parameter(0)
+  %it = s32[] get-tuple-element(%c0), index=0
+  %lim = s32[] constant(4)
+  ROOT %lt = pred[] compare(%it, %lim), direction=LT
+}
+
+%body (b0: (s32[], f32[1024,1024])) -> (s32[], f32[1024,1024]) {
+  %b0 = (s32[], f32[1024,1024]) parameter(0)
+  %bit = s32[] get-tuple-element(%b0), index=0
+  %bone = s32[] constant(1)
+  %binc = s32[] add(%bit, %bone)
+  %bx = f32[1024,1024]{1,0} get-tuple-element(%b0), index=1
+  %bdot = f32[1024,1024]{1,0} dot(%bx, %bx), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %bar = f32[1024,1024]{1,0} all-reduce(%bdot), replica_groups={{0,1,2,3}}, to_apply=%addc
+  ROOT %btup = (s32[], f32[1024,1024]) tuple(%binc, %bar)
+}
+
+ENTRY %main (p0: f32[4096,4096], p1: f32[1024,1024]) -> f32[1024,1024] {
+  %p0 = f32[4096,4096]{1,0} parameter(0)
+  %p1 = f32[1024,1024]{1,0} parameter(1)
+  %big = f32[4096,4096]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%addc
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[1024,1024]) tuple(%zero, %p1)
+  %w = (s32[], f32[1024,1024]) while(%init), condition=%cond, body=%body
+  %res = f32[1024,1024]{1,0} get-tuple-element(%w), index=1
+  ROOT %out = f32[1024,1024]{1,0} add(%res, %res)
+}
+"""
+
+#: the same computation invoked from two call sites — node bookkeeping must
+#: keep the invocations apart
+_TWICE_CALLED = """
+%f (fp: f32[1024,1024]) -> f32[1024,1024] {
+  %fp = f32[1024,1024]{1,0} parameter(0)
+  ROOT %fdot = f32[1024,1024]{1,0} dot(%fp, %fp), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+ENTRY %main (p0: f32[1024,1024]) -> f32[1024,1024] {
+  %p0 = f32[1024,1024]{1,0} parameter(0)
+  %c1 = f32[1024,1024]{1,0} call(%p0), to_apply=%f
+  %c2 = f32[1024,1024]{1,0} call(%p0), to_apply=%f
+  ROOT %sum2 = f32[1024,1024]{1,0} add(%c1, %c2)
+}
+"""
+
+
+# ---------------------------------------------------------------------------
+# regression: the scheduling bugs
+# ---------------------------------------------------------------------------
+
+def test_ici_clock_never_travels_backward():
+    """A collective after a while loop must schedule AFTER the previous
+    collective releases the fabric (regression: `ici_free = min(...)`)."""
+    rep = Engine().simulate(parse_hlo_module(_WHILE_THEN_COLLECTIVE))
+    ici = sorted((e for e in rep.timeline if e.unit == "ici"),
+                 key=lambda e: e.start)
+    assert len(ici) == 2
+    first, second = ici
+    assert second.start >= _entry_span(first) - 1e-15, \
+        "second collective scheduled in the past (ICI time travel)"
+    # and the second collective also respects its dataflow dep (the while)
+    assert second.start >= _entry_span(_by_name(rep, "binc")) - 1e-15
+
+
+def test_call_result_waits_for_trailing_collective():
+    """A consumer of a call whose root is a collective starts only once the
+    collective's result exists (regression: run_comp returned local_end)."""
+    rep = Engine(overlap_collectives=True).simulate(
+        parse_hlo_module(_CALL_ROOT_COLLECTIVE))
+    car = _by_name(rep, "car")
+    dd = _by_name(rep, "dd")
+    assert car.unit == "ici" and car.duration > 0
+    assert dd.start >= _entry_span(car) - 1e-15
+
+
+def test_window_launch_overhead_matches_full_run():
+    """Fast-forwarded ops must pay the same launch-overhead tax as detailed
+    ones (regression: timeline-only sum under window=)."""
+    mod = parse_hlo_module(_DIAMOND)
+    eng = Engine()
+    full = eng.simulate(mod)
+    win = eng.simulate(mod, window=(0, 2))
+    assert len(win.timeline) < len(full.timeline)
+    assert win.launch_overhead_seconds == \
+        pytest.approx(full.launch_overhead_seconds, rel=1e-9)
+    assert win.ff_overhead_seconds > 0
+    # totals agree between windowed and full runs
+    assert win.total_flops == pytest.approx(full.total_flops)
+    assert win.total_seconds == pytest.approx(full.total_seconds, rel=1e-6)
+
+
+def test_while_iteration_cost_not_dropped_by_busy_resource():
+    """Pre-loop ICI contention must not erase body compute from the
+    per-iteration cost (regression: iteration clock based at the latest
+    touched resource's snapshot)."""
+    rep = Engine().simulate(parse_hlo_module(_BUSY_ICI_THEN_WHILE))
+    big = _by_name(rep, "big")
+    bdot = _by_name(rep, "bdot")
+    bar = _by_name(rep, "bar")
+    trip = 4
+    assert bdot.scale == pytest.approx(trip)
+    # every trip pays the full loop-carried chain (dot then all-reduce),
+    # on top of the unrelated collective the loop had to wait out
+    assert rep.total_seconds >= _entry_span(big) \
+        + trip * (bdot.duration + bar.duration) - 1e-12
+    # and the pre-loop busy-wait is paid once, not once per trip
+    assert rep.total_seconds <= rep.compute_seconds + rep.ici_seconds + 1e-12
+
+
+def test_repeated_call_keeps_critical_path_exact():
+    """Two call sites of one computation must not collide in the node
+    bookkeeping (regression: node ids keyed by computation/op only)."""
+    rep = Engine().simulate(parse_hlo_module(_TWICE_CALLED))
+    dots = [e for e in rep.timeline if e.name == "fdot"]
+    assert len(dots) == 2
+    # serial stream: the calls chain, then the join — the critical path
+    # accounts every second of the makespan
+    assert sum(rep.critical_path_seconds.values()) == \
+        pytest.approx(rep.total_seconds, rel=1e-9)
+    assert rep.total_seconds == pytest.approx(
+        2 * dots[0].duration + _by_name(rep, "sum2").duration, rel=1e-9)
+
+
+#: independent collective + dot joined at the root: overlappable in theory,
+#: so the no-async baseline must actively forbid it
+_IND_COLLECTIVE = """
+%addc (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+
+ENTRY %main (p0: f32[2048,2048]) -> f32[2048,2048] {
+  %p0 = f32[2048,2048]{1,0} parameter(0)
+  %ar = f32[2048,2048]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%addc
+  %dt = f32[2048,2048]{1,0} dot(%p0, %p0), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %jj = f32[2048,2048]{1,0} add(%ar, %dt)
+}
+"""
+
+
+def test_no_overlap_is_a_barrier_across_all_streams():
+    """overlap_collectives=False must yield the serial baseline even with
+    multiple compute streams (regression: the collective claimed only one
+    stream, so compute on the others still overlapped it)."""
+    mod = parse_hlo_module(_IND_COLLECTIVE)
+    serial1 = Engine(overlap_collectives=False,
+                     num_compute_streams=1).simulate(mod)
+    serial2 = Engine(overlap_collectives=False,
+                     num_compute_streams=2).simulate(mod)
+    overlapped = Engine(overlap_collectives=True,
+                        num_compute_streams=1).simulate(mod)
+    assert serial2.total_seconds == pytest.approx(serial1.total_seconds,
+                                                  rel=1e-9)
+    assert overlapped.total_seconds < serial1.total_seconds
+    # no compute entry runs inside the collective's span in the baseline
+    ar = _by_name(serial2, "ar")
+    for e in serial2.timeline:
+        if e.unit != "ici":
+            assert e.start >= _entry_span(ar) - 1e-15 \
+                or e.start + e.duration * e.scale <= ar.start + 1e-15
+
+
+def test_windowed_run_busy_and_exposure_match_full():
+    """Fast-forwarded ops count toward busy totals AND the exposure sweep,
+    so a windowed report's whole-run figures equal the full run's."""
+    mod = parse_hlo_module(_IND_COLLECTIVE)
+    full = Engine().simulate(mod)
+    win = Engine().simulate(mod, window=(0, 2))
+    assert len(win.timeline) < len(full.timeline)
+    assert win.compute_seconds == pytest.approx(full.compute_seconds)
+    assert win.ici_seconds == pytest.approx(full.ici_seconds)
+    assert set(win.exposed_seconds) == set(full.exposed_seconds)
+    for u, v in full.exposed_seconds.items():
+        assert win.exposed_seconds[u] == pytest.approx(v, rel=1e-9)
+    assert win.total_seconds <= win.compute_seconds + win.ici_seconds + 1e-12
+    # per-op exposure of a detailed op is not diluted by ff spans
+    assert _by_name(win, "ar").exposed_s == \
+        pytest.approx(_by_name(full, "ar").exposed_s, rel=1e-9)
+
+
+def test_zero_duration_op_pays_issue_overhead():
+    """Zero-work ops occupy the issue slot for the documented fixed cost
+    instead of collapsing to OpTime(0.0, ...)."""
+    from repro.core.hlo_ir import Computation, SimModule
+    mod = SimModule()
+    comp = Computation("c")
+    op = SimOp("z", "custom-call", [Shape("f32", (0,))], [])
+    comp.add(op, is_root=True)
+    ot = op_time(mod, comp, op, V5E)
+    assert ot.unit == "overhead"
+    assert ot.seconds == pytest.approx(V5E.op_launch_overhead_s)
+    assert ot.overhead_s == pytest.approx(ot.seconds)
+
+
+# ---------------------------------------------------------------------------
+# property: conservation on overlapped timelines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("streams,overlap", [(1, True), (2, True), (4, True),
+                                             (1, False), (2, False)])
+def test_reconcile_on_overlapped_timelines(streams, overlap):
+    """IntervalProfile.reconcile() < 1% must hold whatever the overlap."""
+    for text in (_DIAMOND, _WHILE_THEN_COLLECTIVE, _CALL_ROOT_COLLECTIVE):
+        rep = Engine(overlap_collectives=overlap,
+                     num_compute_streams=streams).simulate(
+            parse_hlo_module(text))
+        for buckets in (7, 64):
+            assert profile_intervals(rep, buckets).reconcile() < 0.01
+
+
+def test_reconcile_on_real_capture_with_streams():
+    rep = Engine(num_compute_streams=2).simulate(_capture_scan(6).module)
+    ar = analyze(rep, num_buckets=80)
+    assert ar.reconcile() < 0.01
+    assert rep.total_seconds <= rep.compute_seconds + rep.ici_seconds + 1e-12
+
+
+def test_makespan_bounded_by_serial_chain():
+    """List scheduling can only shorten relative to the serial chain."""
+    for text in (_DIAMOND, _WHILE_THEN_COLLECTIVE, _CALL_ROOT_COLLECTIVE):
+        for streams in (1, 2):
+            rep = Engine(num_compute_streams=streams).simulate(
+                parse_hlo_module(text))
+            serial_bound = rep.compute_seconds + rep.ici_seconds
+            assert rep.total_seconds <= serial_bound + 1e-12
+
+
+def test_per_unit_summary_keys():
+    rep = Engine().simulate(parse_hlo_module(_WHILE_THEN_COLLECTIVE))
+    s = rep.summary()
+    assert "exposed_ici_seconds" in s
+    assert any(k.startswith("critical_path_") for k in s)
+    assert s["exposed_ici_seconds"] == pytest.approx(
+        rep.exposed_seconds.get("ici", 0.0))
+    # per-op exposure sums to the per-unit figure
+    assert sum(e.exposed_s for e in rep.timeline if e.unit == "ici") == \
+        pytest.approx(rep.exposed_seconds.get("ici", 0.0))
+
+
+def test_num_compute_streams_validation():
+    with pytest.raises(ValueError):
+        Engine(num_compute_streams=0)

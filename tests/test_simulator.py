@@ -52,9 +52,17 @@ def test_engine_report_invariants():
     assert 0 <= rep.mfu <= 1.0
     assert rep.compute_seconds <= rep.total_seconds + 1e-12
     assert rep.exposed_ici_seconds >= 0
+    # dataflow-scheduler invariants: exposure never exceeds the busy time,
+    # and the makespan never exceeds the serial-chain bound
+    for unit, s in rep.exposed_seconds.items():
+        assert 0 <= s <= rep.unit_seconds.get(unit, 0.0) + 1e-12
+    assert rep.total_seconds <= rep.compute_seconds + rep.ici_seconds + 1e-12
+    assert sum(rep.critical_path_seconds.values()) <= rep.total_seconds + 1e-9
     # window-simulation (op-level checkpoint) must not change totals much
     rep_w = Engine().simulate(cap.module, window=(0, 3))
     assert abs(rep_w.total_flops - rep.total_flops) / rep.total_flops < 1e-6
+    assert abs(rep_w.launch_overhead_seconds - rep.launch_overhead_seconds) \
+        <= 1e-12 + 1e-6 * rep.launch_overhead_seconds
 
 
 def test_collective_model_monotone():
