@@ -4,13 +4,14 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lenet-repro analyze bench lint help
+.PHONY: test lenet-repro analyze bench bench-memory lint help
 
 help:
 	@echo "make test         - tier-1 pytest suite (the ROADMAP verify command)"
 	@echo "make lenet-repro  - paper experiments on LeNet incl. phase analysis"
 	@echo "make analyze      - phase-analyze a config (ARCH=lenet by default)"
 	@echo "make bench        - full benchmark driver (benchmarks/run.py)"
+	@echo "make bench-memory - HBM camping-dilation sweep (repro.memory)"
 	@echo "make lint         - byte-compile + import-sanity checks"
 
 test:
@@ -26,6 +27,9 @@ analyze:
 bench:
 	$(PYTHON) benchmarks/run.py
 
+bench-memory:
+	$(PYTHON) benchmarks/memory_camping.py
+
 lint:
 	$(PYTHON) -m compileall -q src tests examples benchmarks
-	$(PYTHON) -c "import repro.core, repro.analysis, repro.distributed.compression"
+	$(PYTHON) -c "import repro.core, repro.analysis, repro.memory, repro.distributed.compression"

@@ -7,7 +7,10 @@
 3. power breakdown (Fig. 8);
 4. the four cuDNN convolution algorithms through the simulator (§V);
 5. AerialVision-style phase analysis of the whole training step (§V,
-   Fig. 4/5): labeled phases, per-unit occupancy, HBM channel balance.
+   Fig. 4/5): labeled phases, per-unit occupancy, HBM channel balance;
+6. the memory hierarchy (§V, Figs. 22-25): live-range HBM footprint
+   (`peak_hbm_bytes`), VMEM spills, and the camping dilation the
+   per-channel model adds over the flat-clock baseline.
 
     PYTHONPATH=src python examples/lenet_paper_repro.py [--trace out.json]
 
@@ -117,6 +120,20 @@ def main():
         "phase segmentation found too few phases")
     print(f"  detected {len(ar.phases)} phases "
           f"({len(distinct)} distinct labels: {sorted(distinct)})")
+
+    print("== 6. memory hierarchy (SS V, Figs. 22-25) ==")
+    assert rep.memory is not None and rep.peak_hbm_bytes > 0
+    print(rep.memory.table(top=4))
+    print(f"  spill traffic: {rep.spill_bytes / 2**20:.2f} MiB "
+          f"({rep.spill_fraction * 100:.1f}% of HBM bytes), "
+          f"channel imbalance {rep.channel_imbalance:.2f}")
+    flat = Simulator(memory_model=False).performance(cap)
+    dilation = rep.total_seconds / max(flat.total_seconds, 1e-30)
+    print(f"  camping dilation vs flat-clock model: {dilation:.3f}x "
+          f"(per-channel contention is simulated mechanism, not annotation)")
+    assert dilation >= 1.0 - 1e-9, "per-channel model must never be faster"
+    assert rep.peak_hbm_bytes <= rep.hw.hbm_bytes, \
+        "LeNet cannot oversubscribe a 16 GiB chip"
     if trace_path:
         with open(trace_path, "w") as f:
             f.write(ar.to_chrome_trace())

@@ -13,9 +13,9 @@ Components
 * :mod:`repro.analysis.phases`    — detect phase boundaries from shifts in
   the dominant unit and label each phase compute-bound / bandwidth-bound /
   ici-exposed / launch-overhead-bound;
-* :mod:`repro.analysis.channels`  — hash per-op HBM traffic across
-  ``hw.hbm_channels`` and report the imbalance (the partition-camping
-  detector, Fig. 22-25);
+* :mod:`repro.analysis.channels`  — aggregate the engine's per-op channel
+  splits (``TimelineEntry.channel_bytes``, placed by :mod:`repro.memory`)
+  and report the imbalance (the partition-camping detector, Fig. 22-25);
 * :mod:`repro.analysis.export`    — JSON / chrome://tracing / terminal ASCII
   renderings of all of the above.
 

@@ -34,6 +34,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--hw", default="tpu-v5e", help="chip spec (tpu-v5e|tpu-v5p)")
     p.add_argument("--no-overlap", action="store_true",
                    help="serialize collectives instead of overlapping")
+    p.add_argument("--no-memory", action="store_true",
+                   help="disable the repro.memory hierarchy (flat HBM "
+                        "clock, no placements/spills) — the legacy model")
     p.add_argument("--chrome-trace", metavar="PATH",
                    help="write chrome://tracing JSON here ('-' for stdout)")
     p.add_argument("--json", metavar="PATH",
@@ -70,7 +73,8 @@ def main(argv=None) -> int:
     rc = C.RunConfig(model=model_cfg, shape=shape, mesh=C.SMOKE_MESH)
 
     sim = Simulator(hw=CHIPS[args.hw],
-                    overlap_collectives=not args.no_overlap)
+                    overlap_collectives=not args.no_overlap,
+                    memory_model=not args.no_memory)
     print(f"capturing {args.arch} train step "
           f"(seq={args.seq_len}, batch={args.batch}, {args.hw}) ...",
           file=sys.stderr)
@@ -83,6 +87,12 @@ def main(argv=None) -> int:
           f"MFU {s['mfu'] * 100:.1f}%, HBM util "
           f"{s['hbm_utilization'] * 100:.1f}%, launch overhead "
           f"{s['launch_overhead_seconds'] * 1e6:.1f} us ==")
+    if rep.memory is not None:
+        print(f"   memory: peak {rep.peak_hbm_bytes / 2**20:.1f} MiB "
+              f"({rep.peak_hbm_fraction * 100:.1f}% of HBM), spill "
+              f"{rep.spill_bytes / 2**20:.1f} MiB "
+              f"({rep.spill_fraction * 100:.1f}% of traffic), channel "
+              f"imbalance {rep.channel_imbalance:.2f}")
     print()
     print(ar.phase_table())
     print()

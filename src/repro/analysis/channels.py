@@ -1,17 +1,20 @@
-"""HBM channel model: the paper's DRAM *partition camping* detector, for TPU.
+"""HBM channel report: the paper's DRAM *partition camping* detector, for TPU.
 
 The paper's strongest microarchitectural finding (§V, Fig. 22-25) is that some
 cuDNN kernels concentrate their DRAM traffic on a few memory partitions —
 "partition/bank camping" — so the aggregate DRAM-bandwidth counter looks
-healthy while individual channels saturate.  We reproduce the detector with a
-first-order channel-hash model over ``hw.hbm_channels``:
+healthy while individual channels saturate.
 
-* contiguous ops (dots, fusions, copies) stripe evenly across every channel —
-  the XLA/TPU tiled layouts interleave, so this is the well-behaved baseline;
-* gather/scatter/dynamic-slice/sort traffic lands on a *hashed subset* of
-  channels (``CAMPING_FRACTION`` of them, start channel = CRC32 of the op
-  name) — data-dependent addressing defeats the interleave exactly the way
-  strided accesses defeat GDDR address swizzling in the paper.
+Since the :mod:`repro.memory` subsystem landed, the ENGINE produces the
+canonical per-op channel split: every :class:`~repro.core.engine.TimelineEntry`
+scheduled under the memory model carries ``channel_bytes`` derived from its
+buffer placements (the live-range allocator's addresses under the interleave).
+This module therefore only *aggregates* — it sums the engine's vectors into a
+per-channel total and names the hottest channel's contributors.  Legacy
+reports whose entries carry no placement (hand-built timelines, or runs with
+``memory_model=False``) fall back to :func:`repro.memory.channels.
+legacy_channel_bytes`, the same single-sourced model with a name-hash anchor,
+so the :class:`ChannelReport` API and ASCII table work on both.
 
 ``imbalance`` = hottest-channel bytes / mean-channel bytes; 1.0 is perfectly
 balanced, and anything well above ~1.5 means a minority of channels gates the
@@ -21,23 +24,14 @@ timeline.
 """
 from __future__ import annotations
 
-import zlib
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
-from repro.core.engine import SimReport
+from repro.core.engine import SimReport, TimelineEntry
 from repro.core.hw import HardwareSpec
-# camping classifier + constants are single-sourced in repro.core.vision;
-# this module refines only the channel *placement* (CRC32-hashed subset
-# instead of vision's fixed prefix)
-from repro.core.vision import CAMPING_FRACTION, CAMPING_OPS, is_camping_op
-
-
-def _camped_channels(name: str, n_channels: int) -> List[int]:
-    """Deterministic channel subset for a camping op (CRC32 start, wrap)."""
-    n = max(int(n_channels * CAMPING_FRACTION), 1)
-    start = zlib.crc32(name.encode()) % n_channels
-    return [(start + i) % n_channels for i in range(n)]
+# the camping classifier + channel split are single-sourced in repro.memory
+from repro.memory.channels import (CAMPING_FRACTION, CAMPING_OPS,
+                                   is_camping_op, legacy_channel_bytes)
 
 
 @dataclass
@@ -72,43 +66,45 @@ class ChannelReport:
         return "\n".join(lines)
 
 
+def _entry_channel_bytes(e: TimelineEntry, n_ch: int) -> List[float]:
+    """This entry's trip-scaled per-channel bytes: the engine's placement-
+    derived split when present (and sized for this spec), else the legacy
+    name-anchored model."""
+    vec = getattr(e, "channel_bytes", None)
+    if vec is not None and len(vec) == n_ch:
+        return [v * e.scale for v in vec]
+    return legacy_channel_bytes(e.opcode, e.name, e.hbm_bytes * e.scale, n_ch)
+
+
 def channel_traffic(report: SimReport, hw: Optional[HardwareSpec] = None
                     ) -> ChannelReport:
-    """Hash every timeline op's HBM traffic across the chip's channels."""
+    """Aggregate every timeline op's channel split into per-channel totals."""
     hw = hw or report.hw
     n_ch = hw.hbm_channels
     per_ch = [0.0] * n_ch
     camping_bytes = 0.0
     total = 0.0
-
-    def channels_for(e) -> List[int]:
-        if is_camping_op(e.opcode, e.name):
-            return _camped_channels(e.name, n_ch)
-        return list(range(n_ch))
+    per_op: List[Tuple[TimelineEntry, List[float]]] = []
 
     for e in report.timeline:
-        b = e.hbm_bytes * e.scale
+        vec = _entry_channel_bytes(e, n_ch)
+        b = sum(vec)
         if b <= 0:
             continue
         total += b
-        chans = channels_for(e)
-        if len(chans) < n_ch:
+        if is_camping_op(e.opcode, e.name):
             camping_bytes += b
-        share = b / len(chans)
-        for ch in chans:
-            per_ch[ch] += share
+        for ch in range(n_ch):
+            per_ch[ch] += vec[ch]
+        per_op.append((e, vec))
 
     mean = sum(per_ch) / n_ch if n_ch else 0.0
     imbalance = (max(per_ch) / mean) if mean > 0 else 1.0
     hot = max(range(n_ch), key=lambda c: per_ch[c]) if n_ch else 0
 
     contributors: dict = {}
-    for e in report.timeline:
-        b = e.hbm_bytes * e.scale
-        if b <= 0:
-            continue
-        chans = channels_for(e)
-        if hot in chans:
-            contributors[e.name] = contributors.get(e.name, 0.0) + b / len(chans)
+    for e, vec in per_op:
+        if n_ch and vec[hot] > 0:
+            contributors[e.name] = contributors.get(e.name, 0.0) + vec[hot]
     top = sorted(contributors.items(), key=lambda kv: -kv[1])[:8]
     return ChannelReport(per_ch, imbalance, camping_bytes, total, hot, top)

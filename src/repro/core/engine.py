@@ -28,11 +28,21 @@ Beyond busy totals, the schedule yields per-unit *exposed* seconds (span
 where only that unit is active — the generalization of exposed-collective
 time) and per-unit *critical-path* seconds (time attributed to each unit
 along the binding-constraint chain that determines the makespan).
+
+With ``memory_model=True`` (default) the engine additionally consults
+:mod:`repro.memory`: a live-range allocator assigns every value an HBM
+placement, the flat ``hbm`` clock is replaced by per-channel free times
+(an op's HBM duration is ``max_over_channels(bytes / per_channel_bw)``,
+so camping gather/scatter traffic genuinely dilates the timeline the way
+the paper's partition camping does), and VMEM-overflowing working sets pay
+spill traffic.  ``SimReport`` then carries ``peak_hbm_bytes``,
+``spill_bytes`` and per-channel busy seconds, and every ``TimelineEntry``
+its channel-byte split.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.hlo_ir import (
     _BODY_RE, _CALLS_RE, _TO_APPLY_RE, Computation, SimModule, SimOp,
@@ -73,6 +83,10 @@ class TimelineEntry:
     comp: str = ""          # enclosing HLO computation name
     overhead_s: float = 0.0  # issue/launch-cost portion of ``duration`` [s]
     exposed_s: float = 0.0   # wall-clock span where this op's unit ran alone
+    #: per-iteration HBM bytes per channel (index = channel id), produced by
+    #: the memory model from the op's buffer placements; None on legacy runs
+    channel_bytes: Optional[List[float]] = None
+    spill_bytes: float = 0.0  # per-iteration VMEM-spill HBM traffic [bytes]
 
 
 @dataclass
@@ -114,18 +128,56 @@ class SimReport:
     #: issue cost of ops fast-forwarded outside a ``window=`` run (they carry
     #: no timeline entry, so the property below adds this explicitly)
     ff_overhead_seconds: float = 0.0
+    #: peak simultaneous HBM bytes (the live-range allocator's high-water
+    #: mark); 0.0 when the memory model is off
+    peak_hbm_bytes: float = 0.0
+    #: HBM traffic added by VMEM working-set spills (trip-count scaled);
+    #: already included in ``total_hbm_bytes``
+    spill_bytes: float = 0.0
+    #: per-channel HBM transfer busy seconds (index = channel id); empty
+    #: when the memory model is off
+    channel_busy_seconds: List[float] = field(default_factory=list)
+    #: the allocator's full report (repro.memory.AllocationMap), or None
+    memory: Optional[Any] = None
+
+    @staticmethod
+    def _ratio(num: float, den: float) -> float:
+        """Ratio guarded against empty runs / zero-capability specs: a
+        zero-duration timeline or a zero-bandwidth HardwareSpec reads as
+        0.0 utilization, never a ZeroDivisionError."""
+        if den <= 0:
+            return 0.0
+        return num / den
 
     @property
     def mfu(self) -> float:
-        if self.total_seconds <= 0:
-            return 0.0
-        return self.total_flops / (self.total_seconds * self.hw.peak_bf16_flops)
+        return self._ratio(self.total_flops,
+                           self.total_seconds * self.hw.peak_bf16_flops)
 
     @property
     def hbm_utilization(self) -> float:
-        if self.total_seconds <= 0:
-            return 0.0
-        return self.total_hbm_bytes / (self.total_seconds * self.hw.hbm_bw)
+        return self._ratio(self.total_hbm_bytes,
+                           self.total_seconds * self.hw.hbm_bw)
+
+    @property
+    def peak_hbm_fraction(self) -> float:
+        """Peak live footprint as a fraction of HBM capacity."""
+        return self._ratio(self.peak_hbm_bytes, self.hw.hbm_bytes)
+
+    @property
+    def spill_fraction(self) -> float:
+        """Share of the HBM traffic that is VMEM spill."""
+        return self._ratio(self.spill_bytes, self.total_hbm_bytes)
+
+    @property
+    def channel_imbalance(self) -> float:
+        """Busiest-channel busy seconds / mean (1.0 = perfectly balanced)."""
+        if not self.channel_busy_seconds:
+            return 1.0
+        mean = sum(self.channel_busy_seconds) / len(self.channel_busy_seconds)
+        if mean <= 0:
+            return 1.0
+        return max(self.channel_busy_seconds) / mean
 
     @property
     def launch_overhead_seconds(self) -> float:
@@ -154,6 +206,9 @@ class SimReport:
             "total_hbm_bytes": self.total_hbm_bytes,
             "total_ici_bytes": self.total_ici_bytes,
             "launch_overhead_seconds": self.launch_overhead_seconds,
+            "peak_hbm_bytes": self.peak_hbm_bytes,
+            "spill_bytes": self.spill_bytes,
+            "channel_imbalance": self.channel_imbalance,
             **{f"unit_{k}_seconds": v for k, v in self.unit_seconds.items()},
             **{f"exposed_{k}_seconds": v
                for k, v in self.exposed_seconds.items()},
@@ -168,17 +223,21 @@ class Engine:
     ``overlap_collectives=False`` makes every collective a barrier across
     ALL compute streams (fully serial, the paper's no-async baseline);
     ``num_compute_streams`` sets dispatch concurrency for compute ops
-    (1 = serial TensorCore).
+    (1 = serial TensorCore); ``memory_model=False`` falls back to the
+    pre-memory-subsystem flat ``hbm`` clock (no placements, no per-channel
+    contention, no VMEM spills) — the baseline the camping benchmark
+    measures dilation against.
     """
 
     def __init__(self, hw: HardwareSpec = V5E, overlap_collectives: bool = True,
-                 num_compute_streams: int = 1):
+                 num_compute_streams: int = 1, memory_model: bool = True):
         if num_compute_streams < 1:
             raise ValueError(
                 f"num_compute_streams must be >= 1, got {num_compute_streams}")
         self.hw = hw
         self.overlap = overlap_collectives
         self.num_compute_streams = num_compute_streams
+        self.memory_model = memory_model
 
     # ------------------------------------------------------------------
     def simulate(self, mod: SimModule, window: Optional[Tuple[int, int]] = None
@@ -192,11 +251,22 @@ class Engine:
         if mod.entry is None:
             raise ValueError("module has no entry computation")
 
+        from repro.memory import MemoryModel
+        mem = MemoryModel(mod, self.hw) if self.memory_model else None
+
         timeline: List[TimelineEntry] = []
         unit_seconds: Dict[str, float] = {}
-        tot = {"flops": 0.0, "hbm": 0.0, "ici": 0.0}
+        tot = {"flops": 0.0, "hbm": 0.0, "ici": 0.0, "spill": 0.0}
         unit_free: Dict[str, float] = {u: 0.0 for u in RESOURCES}
         unit_last: Dict[str, Optional[str]] = {u: None for u in RESOURCES}
+        if mem is not None:
+            # per-channel HBM clocks: hbm-unit ops claim exactly the
+            # channels their byte split touches, so camped ops contend on
+            # their subset while disjoint subsets overlap.  Keyed inside
+            # unit_free so while-loop snapshot/push-forward covers them.
+            for c in range(self.hw.hbm_channels):
+                unit_free[f"hbm:{c}"] = 0.0
+                unit_last[f"hbm:{c}"] = None
         streams: List[float] = [0.0] * self.num_compute_streams
         stream_last: List[Optional[str]] = [None] * self.num_compute_streams
         #: (comp name, op name) -> (value-ready time, binding crit node)
@@ -225,15 +295,27 @@ class Engine:
 
         def schedule(node_id: str, unit: str, seconds: float, scale: float,
                      dep_t: float, dep_pred: Optional[str], use_stream: bool,
-                     barrier: bool = False) -> Tuple[float, float]:
+                     barrier: bool = False,
+                     channels: Optional[List[int]] = None) -> Tuple[float, float]:
             """ASAP list-scheduling: start at max(operand-ready, unit-free
             [, stream-free]); claim the unit (and stream) until finish.
+
+            ``channels`` (memory model, hbm-unit ops): contend on — and
+            claim — the per-channel HBM clocks the op's byte split touches
+            instead of one flat ``hbm`` clock, so two camped transfers on
+            disjoint channel subsets may overlap while an evenly striped op
+            still serializes against everything.
 
             ``barrier=True`` (non-overlapped collectives): wait for EVERY
             stream and hold them all until finish — with multiple streams a
             collective must not run beside compute on another stream, or
             ``overlap_collectives=False`` would be silently ignored."""
-            cands = [(dep_t, dep_pred), (unit_free[unit], unit_last[unit])]
+            cands = [(dep_t, dep_pred)]
+            if channels:
+                cands += [(unit_free[f"hbm:{c}"], unit_last[f"hbm:{c}"])
+                          for c in channels]
+            else:
+                cands.append((unit_free[unit], unit_last[unit]))
             si = None
             if barrier:
                 bi = max(range(len(streams)), key=streams.__getitem__)
@@ -243,8 +325,13 @@ class Engine:
                 cands.append((streams[si], stream_last[si]))
             start, pred = max(cands, key=lambda c: c[0])
             finish = start + seconds
-            unit_free[unit] = finish
-            unit_last[unit] = node_id
+            if channels:
+                for c in channels:
+                    unit_free[f"hbm:{c}"] = finish
+                    unit_last[f"hbm:{c}"] = node_id
+            else:
+                unit_free[unit] = finish
+                unit_last[unit] = node_id
             if barrier:
                 for i in range(len(streams)):
                     streams[i] = finish
@@ -269,6 +356,10 @@ class Engine:
             last: Tuple[float, Optional[str]] = (t_base, base_pred)
             for op in comp.ops:
                 key = (comp_name, op.name)
+                if mem is not None:
+                    # linear-scan allocator step (aliases included, so the
+                    # per-invocation live ranges line up with program order)
+                    mem.visit(inv, comp, op)
                 if op.opcode in SKIP_OPS:
                     # zero-cost dataflow plumbing: propagate readiness
                     ready[key] = dep_ready(comp_name, op, t_base, base_pred)
@@ -276,6 +367,8 @@ class Engine:
                 if op.opcode == "while":
                     ready[key] = run_while(comp_name, op, scale, t_base,
                                            base_pred)
+                    if mem is not None:
+                        mem.after_subcomputation(inv, op)
                     last = max(last, ready[key], key=lambda r: r[0])
                     continue
                 if op.opcode == "call":
@@ -283,17 +376,27 @@ class Engine:
                     if c and c.group(1) in mod.computations:
                         d, dpred = dep_ready(comp_name, op, t_base, base_pred)
                         ready[key] = run_comp(c.group(1), scale, d, dpred)
+                        if mem is not None:
+                            mem.after_subcomputation(inv, op)
                         last = max(last, ready[key], key=lambda r: r[0])
                         continue
                 state["idx"] += 1
                 ot = op_time(mod, comp, op, self.hw)
+                mo = mem.time_op(inv, comp, op, ot) if mem is not None \
+                    else None
+                chans = None
+                if mo is not None:
+                    ot = mo.ot
+                    if ot.unit == "hbm":
+                        chans = mo.channels
                 d, dpred = dep_ready(comp_name, op, t_base, base_pred)
                 node_id = f"{inv}:{comp_name}/{op.name}"
                 on_ici = ot.unit == "ici"
                 use_stream = not on_ici
                 barrier = on_ici and not self.overlap
                 start, _ = schedule(node_id, ot.unit, ot.seconds, scale,
-                                    d, dpred, use_stream, barrier)
+                                    d, dpred, use_stream, barrier,
+                                    channels=chans)
                 if window and not (window[0] <= state["idx"] < window[1]):
                     # fast-forward: same clocks advanced, no timeline entry
                     state["ff_overhead"] += ot.overhead_s * scale
@@ -302,10 +405,20 @@ class Engine:
                     timeline.append(TimelineEntry(
                         op.name, op.opcode, ot.unit, start, ot.seconds, scale,
                         ot.flops, ot.hbm_bytes, ot.ici_bytes, comp_name,
-                        overhead_s=ot.overhead_s))
+                        overhead_s=ot.overhead_s,
+                        channel_bytes=mo.channel_bytes if mo else None,
+                        spill_bytes=float(mo.spill_bytes) if mo else 0.0))
                 self._account(ot, scale, tot, unit_seconds)
+                if mo is not None:
+                    mem.account(mo, scale)
+                    tot["spill"] += mo.spill_bytes * scale
+                    # unresolved call ops fall through to here: perform any
+                    # release their visit deferred (no-op for other ops)
+                    mem.after_subcomputation(inv, op)
                 ready[key] = (nodes[node_id].finish, node_id)
                 last = max(last, ready[key], key=lambda r: r[0])
+            if mem is not None:
+                mem.close_invocation(inv)
             if comp.root is not None and (comp_name, comp.root) in ready:
                 return ready[(comp_name, comp.root)]
             return last
@@ -328,7 +441,7 @@ class Engine:
                 return d, dpred
             t0, pred0 = max(
                 [(d, dpred)]
-                + [(unit_free[u], unit_last[u]) for u in RESOURCES]
+                + [(unit_free[u], unit_last[u]) for u in unit_free]
                 + [(streams[i], stream_last[i])
                    for i in range(len(streams))],
                 key=lambda c: c[0])
@@ -344,7 +457,7 @@ class Engine:
                             if t > snap_streams[i]])
             iter_time = max(t1_res - t0, 0.0)
             extra = iter_time * (trip - 1)
-            for u in RESOURCES:
+            for u in unit_free:
                 if unit_free[u] > snap_units[u]:
                     unit_free[u] += extra
             for i in range(len(streams)):
@@ -365,6 +478,7 @@ class Engine:
         ici_seconds = unit_seconds.get("ici", 0.0)
         exposed = self._exposure(timeline, ff_spans)
         critical_path = self._critical_path(nodes, state["makespan_node"])
+        memmap = mem.finish() if mem is not None else None
         return SimReport(
             total_seconds=total,
             compute_seconds=compute_seconds,
@@ -379,6 +493,10 @@ class Engine:
             exposed_seconds=exposed,
             critical_path_seconds=critical_path,
             ff_overhead_seconds=state["ff_overhead"],
+            peak_hbm_bytes=float(memmap.peak_live_bytes) if memmap else 0.0,
+            spill_bytes=tot["spill"],
+            channel_busy_seconds=list(mem.channel_busy) if mem else [],
+            memory=memmap,
         )
 
     # ------------------------------------------------------------------

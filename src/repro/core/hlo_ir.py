@@ -132,6 +132,20 @@ class Computation:
                 uses[p.name].append(op.name)
         return uses
 
+    def last_use(self) -> Dict[str, int]:
+        """value name -> program index of its last consumer here.
+
+        The live-range endpoint view of :meth:`def_use_edges` — a buffer
+        defined at index *i* and last consumed at index *j* is live over
+        ``[i, j]``.  Values absent from the map are never consumed in this
+        computation (the allocator keeps them until the invocation closes).
+        """
+        lu: Dict[str, int] = {}
+        for i, op in enumerate(self.ops):
+            for operand in op.operands:
+                lu[operand] = i
+        return lu
+
 
 # instruction line: [ROOT] %name = TYPE opcode(...operands...), attrs
 _INST_RE = re.compile(

@@ -26,7 +26,8 @@ class HardwareSpec:
     hbm_bytes: int = 16 * 2**30
     hbm_bw: float = 819e9                 # B/s
     hbm_channels: int = 16                # channel model for "bank camping"
-    vmem_bytes: int = 128 * 2**20
+    hbm_interleave_bytes: int = 512       # address-interleave stripe width
+    vmem_bytes: int = 128 * 2**20         # on-chip working-set capacity
     vmem_bw: float = 10e12                # ~VMEM bandwidth
 
     # --- interconnect ---
@@ -45,6 +46,17 @@ class HardwareSpec:
     pj_per_vmem_byte: float = 0.4
     pj_per_ici_byte: float = 10.0
     static_watts: float = 60.0            # idle/static per chip
+
+    @property
+    def hbm_channel_bw(self) -> float:
+        """Per-channel HBM bandwidth (the paper's per-partition bandwidth).
+
+        An evenly interleaved transfer sees ``hbm_bw`` in aggregate; a
+        transfer camping on one channel sees only this.
+        """
+        if self.hbm_channels <= 0:
+            return self.hbm_bw
+        return self.hbm_bw / self.hbm_channels
 
     def matmul_efficiency(self, m: int, n: int, k: int) -> float:
         """MXU systolic occupancy: padding waste for non-128-aligned dims.

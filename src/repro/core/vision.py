@@ -23,17 +23,11 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core.engine import SimReport, TimelineEntry
 from repro.core.hw import HardwareSpec, V5E
-
-# ops whose access patterns concentrate on few channels (camping);
-# single source of truth, shared with repro.analysis.channels
-CAMPING_OPS = ("gather", "scatter", "dynamic-slice", "dynamic-update-slice",
-               "sort")
-CAMPING_FRACTION = 0.25    # they hit ~1/4 of the channels
-
-
-def is_camping_op(opcode: str, name: str) -> bool:
-    """Does this op's access pattern concentrate on few HBM channels?"""
-    return any(c in opcode or c in name for c in CAMPING_OPS)
+# camping classifier + channel split are single-sourced in
+# repro.memory.channels; re-exported here for backward compatibility (this
+# module defined them before the memory subsystem existed)
+from repro.memory.channels import (CAMPING_FRACTION, CAMPING_OPS,
+                                   is_camping_op, legacy_channel_bytes)
 
 
 @dataclass
@@ -105,8 +99,17 @@ def analyze(report: SimReport, hw: HardwareSpec = V5E,
         t0, t1 = e.start, e.start + span
         b0 = min(int(t0 / width), num_buckets - 1)
         b1 = min(int(t1 / width), num_buckets - 1)
-        camping = is_camping_op(e.opcode, e.name)
-        n_ch = max(int(hw.hbm_channels * (CAMPING_FRACTION if camping else 1.0)), 1)
+        # channel shares: the engine's placement-derived split when present
+        # (memory model), else the same single-sourced legacy model the
+        # analysis.channels detector uses — the two views must agree on
+        # which channels an op camps
+        vec = e.channel_bytes
+        if not (vec is not None and len(vec) == hw.hbm_channels
+                and sum(vec) > 0):
+            vec = legacy_channel_bytes(e.opcode, e.name, 1.0, hw.hbm_channels)
+        vsum = sum(vec)
+        shares = [(ch, v / vsum) for ch, v in enumerate(vec) if v > 0] \
+            if vsum > 0 else []
         for bi in range(b0, b1 + 1):
             b = buckets[bi]
             o0, o1 = max(t0, b.t0), min(t1, b.t1)
@@ -116,9 +119,9 @@ def analyze(report: SimReport, hw: HardwareSpec = V5E,
             b.flops += e.flops * e.scale * frac
             bytes_here = e.hbm_bytes * e.scale * frac
             b.hbm_bytes += bytes_here
-            for ch in range(n_ch):
-                b.channel_bytes[ch] += bytes_here / n_ch
-                chan_totals[ch] += bytes_here / n_ch
+            for ch, share in shares:
+                b.channel_bytes[ch] += bytes_here * share
+                chan_totals[ch] += bytes_here * share
 
     mean_ch = sum(chan_totals) / max(len(chan_totals), 1)
     camping_index = (max(chan_totals) / mean_ch) if mean_ch > 0 else 1.0

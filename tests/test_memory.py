@@ -1,0 +1,429 @@
+"""repro.memory tests: live-range allocator semantics, channel split math,
+VMEM spills, the engine's per-channel HBM clocks (camping genuinely dilates
+the timeline — the acceptance criterion), edge cases (empty timeline,
+single-channel spec, over-capacity buffers), the per-channel-busy reconcile
+property, and the SimReport ratio guards."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import channel_traffic
+from repro.core import Engine, Simulator, V5E, capture, parse_hlo_module
+from repro.core.engine import SimReport
+from repro.core.hw import HardwareSpec
+from repro.memory import (
+    CAMPING_FRACTION, LinearScanAllocator, MemoryModel, camped_channel_count,
+    camped_start_channel, channel_bytes_for, channel_time,
+    hbm_transfer_seconds, is_camping_op, legacy_channel_bytes, spill_bytes,
+    working_set_bytes,
+)
+
+MB = 2**20
+
+# ---------------------------------------------------------------------------
+# hand-built HLO modules
+# ---------------------------------------------------------------------------
+
+#: gather chain into ONE shared table: every op is hbm-bound AND camping,
+#: and all camp the same placement-derived subset -> the per-channel model
+#: must dilate the HBM phase by ~1/CAMPING_FRACTION (the chain runs through
+#: the indices operand so the ops still serialize on dataflow)
+_CAMPING = """
+ENTRY %main (p0: f32[1048576], idx: s32[1048576]) -> f32[1048576] {
+  %p0 = f32[1048576]{0} parameter(0)
+  %idx = s32[1048576]{0} parameter(1)
+  %g0 = f32[1048576]{0} gather(%p0, %idx), offset_dims={}
+  %g1 = f32[1048576]{0} gather(%p0, %g0), offset_dims={}
+  ROOT %g2 = f32[1048576]{0} gather(%p0, %g1), offset_dims={}
+}
+"""
+
+#: contiguous chain: evenly interleaved traffic -> per-channel model must
+#: leave the makespan unchanged (within 1%)
+_CONTIGUOUS = """
+ENTRY %main (p0: f32[1048576]) -> f32[1048576] {
+  %p0 = f32[1048576]{0} parameter(0)
+  %a0 = f32[1048576]{0} add(%p0, %p0)
+  %a1 = f32[1048576]{0} add(%a0, %a0)
+  ROOT %a2 = f32[1048576]{0} add(%a1, %a1)
+}
+"""
+
+#: a 4MiB value threaded through tuple -> while -> gte: the carry must stay
+#: live (and keep its address) for the whole loop, not be freed at the
+#: first alias op (regression: releases fired at the while/call visit,
+#: before the body ran, so body buffers were placed over the live carry)
+_WHILE_CARRY = """
+%cond (c0: (s32[], f32[1048576])) -> pred[] {
+  %c0 = (s32[], f32[1048576]) parameter(0)
+  %it = s32[] get-tuple-element(%c0), index=0
+  %lim = s32[] constant(3)
+  ROOT %lt = pred[] compare(%it, %lim), direction=LT
+}
+
+%body (b0: (s32[], f32[1048576])) -> (s32[], f32[1048576]) {
+  %b0 = (s32[], f32[1048576]) parameter(0)
+  %bit = s32[] get-tuple-element(%b0), index=0
+  %bone = s32[] constant(1)
+  %binc = s32[] add(%bit, %bone)
+  %bx = f32[1048576]{0} get-tuple-element(%b0), index=1
+  %t0 = f32[1048576]{0} add(%bx, %bx)
+  ROOT %btup = (s32[], f32[1048576]) tuple(%binc, %t0)
+}
+
+ENTRY %main (p0: f32[1048576]) -> f32[1048576] {
+  %p0 = f32[1048576]{0} parameter(0)
+  %big = f32[1048576]{0} add(%p0, %p0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[1048576]) tuple(%zero, %big)
+  %w = (s32[], f32[1048576]) while(%init), condition=%cond, body=%body
+  %res = f32[1048576]{0} get-tuple-element(%w), index=1
+  ROOT %out = f32[1048576]{0} add(%res, %res)
+}
+"""
+
+#: no scheduled work at all
+_EMPTY = """
+ENTRY %main (p0: f32[16]) -> f32[16] {
+  ROOT %p0 = f32[16]{0} parameter(0)
+}
+"""
+
+
+def _capture_scan(length=6):
+    def f(x, w):
+        def body(c, wl):
+            return jax.nn.relu(c @ wl), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+    return capture(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                   jax.ShapeDtypeStruct((length, 64, 64), jnp.float32))
+
+
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_reuses_dead_ranges():
+    a = LinearScanAllocator(100)
+    b1 = a.define("n1", "x", "c", 40)
+    b2 = a.define("n2", "y", "c", 40)
+    assert (b1.offset, b2.offset) == (0, 40)
+    a.release("n1")
+    b3 = a.define("n3", "z", "c", 30)
+    assert b3.offset == 0, "freed range must be reused first-fit"
+    m = a.finish()
+    assert m.peak_live_bytes == 80
+    assert m.fits and not m.oversubscribed
+
+
+def test_allocator_oversubscription_reports_not_crashes():
+    a = LinearScanAllocator(50)
+    a.define("n1", "x", "c", 40)
+    big = a.define("n2", "y", "c", 200)   # cannot fit below capacity
+    assert big.offset == 40               # placed above the line anyway
+    m = a.finish()
+    assert m.oversubscribed == ["n2"]
+    assert m.peak_live_bytes == 240
+    assert "OVERSUBSCRIBED" in m.table()
+
+
+def test_allocator_peak_tracks_live_not_total():
+    a = LinearScanAllocator(1000)
+    for i in range(5):
+        a.define(f"n{i}", f"b{i}", "c", 100)
+        if i >= 1:
+            a.release(f"n{i-1}")
+    m = a.finish()
+    assert m.peak_live_bytes == 200       # never more than 2 live at once
+    assert len(m.buffers) == 5
+
+
+def test_last_use_matches_def_use_edges():
+    mod = parse_hlo_module(_CONTIGUOUS)
+    comp = mod.computations[mod.entry]
+    lu = comp.last_use()
+    names = [op.name for op in comp.ops]
+    assert lu["a0"] == names.index("a1")
+    assert lu["a1"] == names.index("a2")
+    assert "a2" not in lu                 # root: never consumed here
+
+
+def test_engine_allocation_map_and_peak():
+    rep = Engine().simulate(parse_hlo_module(_CONTIGUOUS))
+    # at any instant at most param + producer + consumer are live: 3 x 4MiB
+    assert rep.peak_hbm_bytes == 3 * 4 * MB
+    assert rep.memory is not None and rep.memory.fits
+    assert len(rep.memory.buffers) == 4   # p0, a0, a1, a2
+    assert rep.peak_hbm_fraction == pytest.approx(
+        rep.peak_hbm_bytes / V5E.hbm_bytes)
+
+
+def test_while_carry_stays_live_through_body():
+    """The loop carry's live range spans the whole while: alias ops (tuple/
+    while/gte) extend their sources, and operand releases at a while/call
+    are deferred until the sub-invocation finishes — so the body's buffers
+    never overlap the live carry, and the peak counts both."""
+    rep = Engine().simulate(parse_hlo_module(_WHILE_CARRY))
+    bufs = {b.name: b for b in rep.memory.buffers}
+    big, t0 = bufs["big"], bufs["t0"]
+    # the body's temporary was defined while the carry was still live...
+    assert big.free_index > t0.def_index
+    # ...so their address ranges must not overlap
+    assert t0.offset >= big.end or big.offset >= t0.end
+    # p0 (resident) + carry + body temp coexist at the peak (+ a few bytes
+    # of s32 loop-counter buffers)
+    assert 3 * 4 * MB <= rep.peak_hbm_bytes < 3 * 4 * MB + 1024
+
+
+def test_engine_survives_module_larger_than_hbm():
+    tiny = dataclasses.replace(V5E, hbm_bytes=1 * MB)
+    rep = Engine(hw=tiny).simulate(parse_hlo_module(_CONTIGUOUS))
+    assert rep.total_seconds > 0          # reported, not crashed
+    assert rep.memory.oversubscribed
+    assert rep.peak_hbm_bytes > tiny.hbm_bytes
+    assert rep.peak_hbm_fraction > 1.0
+
+
+# ---------------------------------------------------------------------------
+# channel split math
+# ---------------------------------------------------------------------------
+
+def test_contiguous_split_is_even_and_time_matches_flat_clock():
+    vec = channel_bytes_for("add", "a0", 16e6, V5E.hbm_channels)
+    assert len(vec) == V5E.hbm_channels
+    assert all(v == pytest.approx(16e6 / V5E.hbm_channels) for v in vec)
+    assert channel_time(vec, V5E.hbm_channel_bw) == \
+        pytest.approx(16e6 / V5E.hbm_bw)
+
+
+def test_camping_split_concentrates_and_dilates():
+    n_ch = V5E.hbm_channels
+    vec = channel_bytes_for("gather", "g0", 16e6, n_ch, base_offset=0)
+    hit = [v for v in vec if v > 0]
+    assert len(hit) == camped_channel_count(n_ch) == int(n_ch * CAMPING_FRACTION)
+    assert sum(vec) == pytest.approx(16e6)
+    assert channel_time(vec, V5E.hbm_channel_bw) == \
+        pytest.approx((16e6 / V5E.hbm_bw) / CAMPING_FRACTION)
+
+
+def test_camping_subset_follows_placement_address():
+    """Same table -> same subset; different placements spread (the anchor
+    must not degenerate to channel 0 for power-of-two offsets, which
+    first-fit produces almost exclusively)."""
+    n_ch = 16
+    a = channel_bytes_for("gather", "g1", 1e6, n_ch, base_offset=4 * MB)
+    b = channel_bytes_for("gather", "g2", 1e6, n_ch, base_offset=4 * MB)
+    assert a == b                     # placement decides, not the op name
+    starts = {camped_start_channel("g", n_ch, base_offset=i * MB)
+              for i in range(16)}
+    assert len(starts) > 4, "anchor degenerates across MiB-aligned offsets"
+
+
+def test_legacy_split_deterministic():
+    a = legacy_channel_bytes("gather", "gather.7", 1e6, 16)
+    b = legacy_channel_bytes("gather", "gather.7", 1e6, 16)
+    assert a == b and sum(a) == pytest.approx(1e6)
+    assert is_camping_op("gather", "gather.7")
+    assert not is_camping_op("fusion", "fused_add")
+
+
+# ---------------------------------------------------------------------------
+# VMEM spills
+# ---------------------------------------------------------------------------
+
+def test_spill_bytes_model():
+    assert spill_bytes(100, 128) == 0
+    assert spill_bytes(200, 128) == 144          # 2 x overflow
+    assert spill_bytes(200, 0) == 0              # disabled capacity
+
+
+def test_working_set_is_boundary_bytes():
+    mod = parse_hlo_module(_CONTIGUOUS)
+    comp = mod.computations[mod.entry]
+    a0 = comp.by_name["a0"]
+    # two reads of p0 + one output, 4MiB each
+    assert working_set_bytes(mod, comp, a0) == 3 * 4 * MB
+
+
+def test_vmem_overflow_becomes_hbm_traffic_and_time():
+    small_vmem = dataclasses.replace(V5E, vmem_bytes=4 * MB)
+    mod = parse_hlo_module(_CONTIGUOUS)
+    spilled = Engine(hw=small_vmem).simulate(mod)
+    clean = Engine().simulate(mod)
+    assert clean.spill_bytes == 0
+    # each add: ws 12MiB over a 4MiB VMEM -> 16MiB spill, three adds
+    assert spilled.spill_bytes == 3 * 2 * 8 * MB
+    assert spilled.total_hbm_bytes == pytest.approx(
+        clean.total_hbm_bytes + spilled.spill_bytes)
+    assert spilled.total_seconds > clean.total_seconds
+    assert 0 < spilled.spill_fraction < 1
+    assert sum(e.spill_bytes * e.scale for e in spilled.timeline) == \
+        pytest.approx(spilled.spill_bytes)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance criterion: camping dilates, contiguous doesn't
+# ---------------------------------------------------------------------------
+
+def test_camping_workload_dilates_by_inverse_fraction():
+    """A gather/scatter-dominated workload must simulate measurably slower
+    under the per-channel model: dilation >= 1/CAMPING_FRACTION - eps on
+    its HBM phase."""
+    mod = parse_hlo_module(_CAMPING)
+    per_channel = Engine(memory_model=True).simulate(mod)
+    flat = Engine(memory_model=False).simulate(mod)
+    dilation = hbm_transfer_seconds(per_channel) / hbm_transfer_seconds(flat)
+    assert dilation >= 1.0 / CAMPING_FRACTION - 0.05
+    # the dilation reaches the makespan, not just the bookkeeping
+    assert per_channel.total_seconds > 2.0 * flat.total_seconds
+    # and the imbalance metric flags it
+    assert per_channel.channel_imbalance > 1.5
+
+
+def test_contiguous_workload_unchanged_within_1pct():
+    mod = parse_hlo_module(_CONTIGUOUS)
+    per_channel = Engine(memory_model=True).simulate(mod)
+    flat = Engine(memory_model=False).simulate(mod)
+    assert per_channel.total_seconds == pytest.approx(flat.total_seconds,
+                                                      rel=0.01)
+    assert per_channel.channel_imbalance == pytest.approx(1.0)
+
+
+def test_single_channel_spec_cannot_camp():
+    one_ch = dataclasses.replace(V5E, hbm_channels=1)
+    mod = parse_hlo_module(_CAMPING)
+    per_channel = Engine(hw=one_ch, memory_model=True).simulate(mod)
+    flat = Engine(hw=one_ch, memory_model=False).simulate(mod)
+    assert per_channel.total_seconds == pytest.approx(flat.total_seconds,
+                                                      rel=0.01)
+    assert per_channel.channel_imbalance == pytest.approx(1.0)
+    assert len(per_channel.channel_busy_seconds) == 1
+
+
+def test_empty_timeline_report_is_sane():
+    rep = Engine().simulate(parse_hlo_module(_EMPTY))
+    assert rep.timeline == []
+    assert rep.total_seconds == 0.0
+    assert rep.mfu == 0.0 and rep.hbm_utilization == 0.0
+    assert rep.spill_fraction == 0.0 and rep.channel_imbalance == 1.0
+    ch = channel_traffic(rep)
+    assert ch.total_bytes == 0 and ch.imbalance == 1.0
+    assert rep.peak_hbm_bytes > 0      # the parameter is still resident
+
+
+# ---------------------------------------------------------------------------
+# reconcile property + scheduler invariants under the memory model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("text", [_CAMPING, _CONTIGUOUS])
+def test_channel_busy_reconciles_with_flat_clock(text):
+    """Per-channel busy seconds must cover the flat-clock HBM busy total:
+    their sum is >= it, and the BUSIEST channel alone is >= the flat clock's
+    transfer time (camping can only concentrate, never shrink, work)."""
+    rep = Engine().simulate(parse_hlo_module(text))
+    flat_transfer = rep.total_hbm_bytes / V5E.hbm_bw
+    busy = rep.channel_busy_seconds
+    assert len(busy) == V5E.hbm_channels
+    assert sum(busy) >= flat_transfer - 1e-15
+    assert max(busy) >= flat_transfer - 1e-15 if "gather" in text \
+        else max(busy) >= flat_transfer / V5E.hbm_channels - 1e-15
+
+
+def test_memory_model_respects_scheduler_bounds_on_real_capture():
+    rep = Engine(num_compute_streams=2).simulate(_capture_scan(6).module)
+    assert rep.total_seconds <= rep.compute_seconds + rep.ici_seconds + 1e-12
+    ar = rep.analysis(num_buckets=60)
+    assert ar.reconcile() < 0.01
+    assert rep.peak_hbm_bytes > 0
+    # dynamic-slice ops inside the scan body camp -> dilation vs flat model
+    flat = Engine(num_compute_streams=2,
+                  memory_model=False).simulate(_capture_scan(6).module)
+    assert rep.total_seconds >= flat.total_seconds - 1e-15
+
+
+def test_analysis_channels_consume_engine_placements():
+    """channel_traffic must aggregate the engine's placement-derived vectors
+    (not re-hash) when they are present, and still work on legacy reports."""
+    rep = Engine().simulate(parse_hlo_module(_CAMPING))
+    assert all(e.channel_bytes is not None for e in rep.timeline)
+    ch = channel_traffic(rep)
+    assert ch.total_bytes == pytest.approx(rep.total_hbm_bytes)
+    assert ch.imbalance > 1.5
+    # per-op vectors flow through verbatim: the per-channel totals equal
+    # the sum of the timeline's own splits
+    for c in range(V5E.hbm_channels):
+        assert ch.channel_bytes[c] == pytest.approx(
+            sum((e.channel_bytes[c] if e.channel_bytes else 0.0) * e.scale
+                for e in rep.timeline))
+    # legacy report (no placements): same API, same table
+    legacy = Engine(memory_model=False).simulate(parse_hlo_module(_CAMPING))
+    assert all(e.channel_bytes is None for e in legacy.timeline)
+    ch2 = channel_traffic(legacy)
+    assert ch2.imbalance > 1.5 and "hot" in ch2.table()
+
+
+def test_windowed_run_agrees_under_memory_model():
+    mod = parse_hlo_module(_CAMPING)
+    full = Engine().simulate(mod)
+    win = Engine().simulate(mod, window=(0, 2))
+    assert len(win.timeline) < len(full.timeline)
+    assert win.total_seconds == pytest.approx(full.total_seconds, rel=1e-9)
+    assert win.total_hbm_bytes == pytest.approx(full.total_hbm_bytes)
+    assert win.peak_hbm_bytes == pytest.approx(full.peak_hbm_bytes)
+
+
+# ---------------------------------------------------------------------------
+# ratio guards (regression: zero-duration / zero-bandwidth specs raised)
+# ---------------------------------------------------------------------------
+
+def test_simreport_ratios_guard_zero_denominators():
+    dead = HardwareSpec(name="dead", peak_bf16_flops=0.0, hbm_bw=0.0,
+                        hbm_bytes=0, hbm_channels=16)
+    rep = SimReport(
+        total_seconds=0.0, compute_seconds=0.0, ici_seconds=0.0,
+        exposed_ici_seconds=0.0, unit_seconds={}, total_flops=1e9,
+        total_hbm_bytes=1e6, total_ici_bytes=0.0, timeline=[], hw=dead)
+    assert rep.mfu == 0.0
+    assert rep.hbm_utilization == 0.0
+    assert rep.peak_hbm_fraction == 0.0
+    assert rep.spill_fraction == 0.0
+    assert rep.channel_imbalance == 1.0
+    # nonzero duration but zero-bandwidth spec must still not raise
+    rep2 = dataclasses.replace(rep, total_seconds=1.0)
+    assert rep2.hbm_utilization == 0.0 and rep2.mfu == 0.0
+    assert "hbm_utilization" in rep2.summary()
+
+
+def test_zero_channel_spec_simulates():
+    no_ch = dataclasses.replace(V5E, hbm_channels=0)
+    rep = Engine(hw=no_ch).simulate(parse_hlo_module(_CONTIGUOUS))
+    assert rep.total_seconds > 0
+    assert rep.channel_busy_seconds == []
+    assert rep.channel_imbalance == 1.0
+
+
+def test_memory_model_facade_flag():
+    sim = Simulator(memory_model=False)
+    rep = sim.performance(_capture_scan(4))
+    assert rep.memory is None and rep.peak_hbm_bytes == 0.0
+    sim2 = Simulator()
+    rep2 = sim2.performance(_capture_scan(4))
+    assert rep2.memory is not None and rep2.peak_hbm_bytes > 0
+
+
+def test_memory_model_direct_visit_api():
+    """MemoryModel used standalone (the engine's calling convention)."""
+    mod = parse_hlo_module(_CONTIGUOUS)
+    comp = mod.computations[mod.entry]
+    mm = MemoryModel(mod, V5E)
+    for op in comp.ops:
+        mm.visit(0, comp, op)
+    mm.close_invocation(0)
+    m = mm.finish()
+    assert m.peak_live_bytes == 3 * 4 * MB
+    assert not m.oversubscribed
