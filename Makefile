@@ -4,15 +4,17 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lenet-repro analyze bench bench-memory lint help
+.PHONY: test lenet-repro analyze bench bench-memory bench-cluster cluster lint help
 
 help:
-	@echo "make test         - tier-1 pytest suite (the ROADMAP verify command)"
-	@echo "make lenet-repro  - paper experiments on LeNet incl. phase analysis"
-	@echo "make analyze      - phase-analyze a config (ARCH=lenet by default)"
-	@echo "make bench        - full benchmark driver (benchmarks/run.py)"
-	@echo "make bench-memory - HBM camping-dilation sweep (repro.memory)"
-	@echo "make lint         - byte-compile + import-sanity checks"
+	@echo "make test          - tier-1 pytest suite (the ROADMAP verify command)"
+	@echo "make lenet-repro   - paper experiments on LeNet incl. phase analysis"
+	@echo "make analyze       - phase-analyze a config (ARCH=lenet by default)"
+	@echo "make bench         - full benchmark driver (benchmarks/run.py)"
+	@echo "make bench-memory  - HBM camping-dilation sweep (repro.memory)"
+	@echo "make bench-cluster - policy x arrival-rate sweep (repro.cluster)"
+	@echo "make cluster       - fleet simulation CLI (POLICY/TRACE/DEVICES vars)"
+	@echo "make lint          - byte-compile + import-sanity checks"
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -30,6 +32,15 @@ bench:
 bench-memory:
 	$(PYTHON) benchmarks/memory_camping.py
 
+bench-cluster:
+	$(PYTHON) benchmarks/cluster_policies.py
+
+POLICY ?= sjf
+TRACE ?= synthetic:bursty
+DEVICES ?= 4
+cluster:
+	$(PYTHON) -m repro.cluster --policy $(POLICY) --trace $(TRACE) --devices $(DEVICES)
+
 lint:
 	$(PYTHON) -m compileall -q src tests examples benchmarks
-	$(PYTHON) -c "import repro.core, repro.analysis, repro.memory, repro.distributed.compression"
+	$(PYTHON) -c "import repro.core, repro.analysis, repro.memory, repro.cluster, repro.distributed.compression"

@@ -88,11 +88,14 @@ def main(argv=None) -> int:
           f"{s['hbm_utilization'] * 100:.1f}%, launch overhead "
           f"{s['launch_overhead_seconds'] * 1e6:.1f} us ==")
     if rep.memory is not None:
-        print(f"   memory: peak {rep.peak_hbm_bytes / 2**20:.1f} MiB "
-              f"({rep.peak_hbm_fraction * 100:.1f}% of HBM), spill "
-              f"{rep.spill_bytes / 2**20:.1f} MiB "
-              f"({rep.spill_fraction * 100:.1f}% of traffic), channel "
-              f"imbalance {rep.channel_imbalance:.2f}")
+        # summary() carries the ratio keys too (peak_hbm_fraction,
+        # spill_fraction, channel_imbalance), so this line and every
+        # exporter read ONE dict instead of mixing attrs and properties
+        print(f"   memory: peak {s['peak_hbm_bytes'] / 2**20:.1f} MiB "
+              f"({s['peak_hbm_fraction'] * 100:.1f}% of HBM), spill "
+              f"{s['spill_bytes'] / 2**20:.1f} MiB "
+              f"({s['spill_fraction'] * 100:.1f}% of traffic), channel "
+              f"imbalance {s['channel_imbalance']:.2f}")
     print()
     print(ar.phase_table())
     print()

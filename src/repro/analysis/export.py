@@ -23,6 +23,17 @@ from repro.core.trace import op_events
 # chrome-trace thread id for the phase lane (op lanes: core.trace.LANES)
 _PHASE_TID = 10
 
+#: occupancy shade ramp shared by every ASCII renderer (0.0 -> ' ',
+#: 1.0 -> '@'); repro.cluster.export reuses it for the fleet view
+SHADES = " .:-=+*#%@"
+
+
+def shade(value: float) -> str:
+    """Map an occupancy fraction in [0, 1] to one :data:`SHADES` glyph."""
+    idx = int(max(value, 0.0) * (len(SHADES) - 1))
+    return SHADES[min(idx, len(SHADES) - 1)]
+
+
 #: one-letter key used by the ASCII phase strip
 PHASE_GLYPHS = {
     "compute-bound": "C",
@@ -96,7 +107,6 @@ def ascii_timeline(analysis, width: int = 72) -> str:
     prof = analysis.profile
     if not prof.intervals:
         return "(empty timeline)"
-    shades = " .:-=+*#%@"
     n = len(prof.intervals)
     stride = max(-(-n // width), 1)   # ceil: never render wider than `width`
     cols = range(0, n, stride)
@@ -114,8 +124,7 @@ def ascii_timeline(analysis, width: int = 72) -> str:
         for i in cols:
             window = prof.intervals[i:i + stride]
             v = sum(iv.occupancy(unit) for iv in window) / len(window)
-            cells.append(shades[min(int(v * (len(shades) - 1)),
-                                    len(shades) - 1)])
+            cells.append(shade(v))
         lines.append(f"{unit:>5s} |{''.join(cells)}|")
     lines.append(f"      0s {'-' * max(len(list(cols)) - 10, 4)} "
                  f"{prof.end_time:.3e}s")

@@ -1,0 +1,344 @@
+"""The discrete-event cluster loop and its :class:`ClusterReport`.
+
+A classic event-heap simulator on a virtual clock: ARRIVAL events come from
+the trace, START decisions from the :class:`~repro.cluster.scheduler.Policy`,
+FINISH/PREEMPT events from the cost model's per-device service times.  All
+state changes happen at event times; between events nothing moves, so the
+loop is O(events log events) regardless of how long the simulated horizon
+is.  Determinism: events at equal times drain in insertion order (a
+monotone sequence number breaks ties), and policies see the queue in
+arrival order.
+
+Time-slicing (``quantum_s``) turns one FINISH into a chain of PREEMPT
+events: the job runs a whole number of steps per slice, goes back in the
+queue, and may resume on a different device (heterogeneous fleets re-price
+the remaining steps there).  Cold starts (``cold_start_s``) charge a setup
+tax whenever a device switches job classes — what the ``locality`` policy
+exists to avoid.
+
+The resulting :class:`ClusterReport` carries per-job records (queueing
+delay, latency, device), per-device busy/setup time, fleet utilization,
+latency percentiles, head-of-line-blocking counters, the cost-model cache
+hit rate, and ``engine_service_seconds`` — the sum of per-job Engine
+makespans recomputed from the cost model, which must reconcile with the
+event loop's accumulated busy time (the acceptance invariant).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.cluster.devices import CostModel, DeviceSlot, Fleet
+from repro.cluster.scheduler import Policy, QueuedJob
+from repro.cluster.workload import Job, Trace
+
+_ARRIVAL, _FINISH = 0, 1          # event kinds (FINISH covers preemptions)
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Linear-interpolation percentile (numpy's default), pure python."""
+    if not values:
+        return 0.0
+    xs = sorted(values)
+    if len(xs) == 1:
+        return xs[0]
+    pos = (len(xs) - 1) * q
+    lo = int(pos)
+    hi = min(lo + 1, len(xs) - 1)
+    return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
+
+
+@dataclass
+class JobRecord:
+    """Per-job outcome: the row a cluster operator would read."""
+
+    job_id: str
+    job_class: str
+    user: str
+    device_id: str                # device of the job's LAST slice
+    arrival_s: float
+    start_s: float                # first time any slice of the job ran
+    finish_s: float
+    service_s: float              # total run time across all slices
+    num_steps: int
+    preemptions: int = 0
+    cold_starts: int = 0
+    oversubscribed: bool = False
+
+    @property
+    def queue_delay_s(self) -> float:
+        return self.start_s - self.arrival_s
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+
+@dataclass
+class Slice:
+    """One contiguous occupancy of one device (setup or run)."""
+
+    device_id: str
+    job_id: str
+    job_class: str
+    t0: float
+    t1: float
+    kind: str = "run"             # "run" | "setup"
+    steps: int = 0                # training steps executed in this slice
+
+
+@dataclass
+class ClusterReport:
+    """Aggregate result of one trace x policy x fleet simulation."""
+
+    policy: str
+    trace_name: str
+    num_devices: int
+    jobs: List[JobRecord]
+    slices: List[Slice]
+    makespan_s: float
+    fleet_busy_seconds: float         # run slices only (service time)
+    fleet_setup_seconds: float        # cold-start slices
+    per_device_busy: Dict[str, float]
+    engine_service_seconds: float     # sum of per-job Engine makespans
+    hol_events: int = 0               # passes where the queue head blocked
+    hol_blocked_jobs: Tuple[str, ...] = ()
+    hol_bypasses: int = 0             # starts that jumped an older job
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def utilization(self) -> float:
+        cap = self.makespan_s * self.num_devices
+        if cap <= 0:
+            return 0.0
+        return (self.fleet_busy_seconds + self.fleet_setup_seconds) / cap
+
+    @property
+    def mean_queue_delay_s(self) -> float:
+        if not self.jobs:
+            return 0.0
+        return sum(j.queue_delay_s for j in self.jobs) / len(self.jobs)
+
+    def latency_percentile(self, q: float) -> float:
+        return percentile([j.latency_s for j in self.jobs], q)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        n = self.cache_hits + self.cache_misses
+        return self.cache_hits / n if n else 0.0
+
+    def reconcile_busy(self) -> float:
+        """|fleet busy - sum of per-job engine makespans| / engine sum.
+
+        The acceptance invariant: every second a device spends running came
+        from an Engine-simulated step, so the two totals must agree."""
+        if self.engine_service_seconds <= 0:
+            return 0.0
+        return (abs(self.fleet_busy_seconds - self.engine_service_seconds)
+                / self.engine_service_seconds)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "policy": self.policy,
+            "trace": self.trace_name,
+            "num_devices": self.num_devices,
+            "num_jobs": len(self.jobs),
+            "makespan_s": self.makespan_s,
+            "fleet_busy_seconds": self.fleet_busy_seconds,
+            "fleet_setup_seconds": self.fleet_setup_seconds,
+            "engine_service_seconds": self.engine_service_seconds,
+            "utilization": self.utilization,
+            "mean_queue_delay_s": self.mean_queue_delay_s,
+            "p50_latency_s": self.latency_percentile(0.50),
+            "p95_latency_s": self.latency_percentile(0.95),
+            "p99_latency_s": self.latency_percentile(0.99),
+            "hol_events": self.hol_events,
+            "hol_bypasses": self.hol_bypasses,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "cache_hit_rate": self.cache_hit_rate,
+        }
+
+    def table(self, max_rows: int = 20) -> str:
+        """Per-job outcome table (worst queueing delays first)."""
+        rows = sorted(self.jobs, key=lambda j: -j.queue_delay_s)[:max_rows]
+        lines = [f"{'job':>9s} {'class':>14s} {'tenant':>9s} {'device':>13s} "
+                 f"{'arrive':>9s} {'qdelay':>9s} {'service':>9s} "
+                 f"{'latency':>9s} {'pre':>3s}"]
+        lines.append("-" * len(lines[0]))
+        for j in rows:
+            lines.append(
+                f"{j.job_id:>9s} {j.job_class:>14s} {j.user:>9s} "
+                f"{j.device_id:>13s} {j.arrival_s:>8.2f}s {j.queue_delay_s:>8.2f}s "
+                f"{j.service_s:>8.2f}s {j.latency_s:>8.2f}s {j.preemptions:>3d}")
+        if len(self.jobs) > max_rows:
+            lines.append(f"... ({len(self.jobs) - max_rows} more jobs)")
+        return "\n".join(lines)
+
+
+class ClusterSim:
+    """Bind fleet + cost model + policy; :meth:`run` executes a trace."""
+
+    def __init__(self, fleet: Fleet, cost_model: CostModel, policy: Policy,
+                 cold_start_s: float = 0.0,
+                 quantum_s: Optional[float] = None):
+        if quantum_s is not None and quantum_s <= 0:
+            raise ValueError(f"quantum_s must be positive, got {quantum_s}")
+        self.fleet = fleet
+        self.cost = cost_model
+        self.policy = policy
+        self.cold_start_s = cold_start_s
+        self.quantum_s = quantum_s
+
+    # ------------------------------------------------------------------
+    def run(self, trace: Trace) -> ClusterReport:
+        fleet, cost = self.fleet, self.cost
+        for dev in fleet:            # reset between runs: fleets are reusable
+            dev.free_at = dev.busy_seconds = dev.setup_seconds = 0.0
+            dev.jobs_done, dev.last_class = 0, None
+
+        ref_hw = fleet.slots[0].hw   # service predictions for SJF ordering
+        max_hbm = fleet.max_hbm_bytes()
+        heap: List[Tuple[float, int, int, object]] = []
+        seq = 0
+        for job in trace.jobs:
+            heapq.heappush(heap, (job.arrival_s, seq, _ARRIVAL, job))
+            seq += 1
+
+        queue: List[QueuedJob] = []
+        records: Dict[str, JobRecord] = {}
+        slices: List[Slice] = []
+        hol_events = 0
+        hol_blocked: List[str] = []
+        hol_bypasses = 0
+
+        def start_one(qj: QueuedJob, dev: DeviceSlot, now: float) -> float:
+            nonlocal seq
+            job = qj.job
+            per_step = cost.report(job.job_class, dev.hw).total_seconds
+            setup = 0.0
+            if self.cold_start_s > 0 and dev.last_class != job.job_class:
+                setup = self.cold_start_s
+                records[job.job_id].cold_starts += 1
+            steps = qj.remaining_steps
+            if self.quantum_s is not None and per_step > 0:
+                steps = min(steps, max(int(self.quantum_s / per_step), 1))
+            run_s = steps * per_step
+            t0 = max(now, dev.free_at)
+            if setup > 0:
+                slices.append(Slice(dev.device_id, job.job_id, job.job_class,
+                                    t0, t0 + setup, kind="setup"))
+            slices.append(Slice(dev.device_id, job.job_id, job.job_class,
+                                t0 + setup, t0 + setup + run_s, steps=steps))
+            dev.free_at = t0 + setup + run_s
+            dev.busy_seconds += run_s
+            dev.setup_seconds += setup
+            dev.last_class = job.job_class
+            rec = records[job.job_id]
+            if qj.first_start_s is None:
+                qj.first_start_s = t0
+                rec.start_s = t0
+            rec.service_s += run_s
+            rec.device_id = dev.device_id
+            qj.remaining_steps -= steps
+            heapq.heappush(heap, (dev.free_at, seq, _FINISH,
+                                  (qj, dev)))
+            seq += 1
+            return dev.free_at
+
+        def schedule_pass(now: float) -> None:
+            nonlocal hol_events, hol_bypasses
+            while queue:
+                free = fleet.free(now)
+                if not free:
+                    return
+                sel = self.policy.select(queue, free, now)
+                if sel is None:
+                    # head-of-line diagnosis: the head cannot start but a
+                    # younger queued job could — the FIFO pathology the
+                    # MLaaS traces blame for short-job delays
+                    head = queue[0]
+                    if any(self.policy._first_fit(qj, free) is not None
+                           for qj in queue[1:]):
+                        hol_events += 1
+                        if head.job.job_id not in hol_blocked:
+                            hol_blocked.append(head.job.job_id)
+                    return
+                qj, dev = sel
+                if any(other.seq < qj.seq for other in queue
+                       if other is not qj):
+                    hol_bypasses += 1
+                queue.remove(qj)
+                start_one(qj, dev, now)
+
+        arrival_seq = 0
+        while heap:
+            now = heap[0][0]
+            # drain every event at `now` before making placement decisions
+            while heap and heap[0][0] == now:
+                _t, _s, kind, payload = heapq.heappop(heap)
+                if kind == _ARRIVAL:
+                    job: Job = payload
+                    peak = cost.peak_hbm_bytes(job.job_class, ref_hw)
+                    over = peak > max_hbm
+                    records[job.job_id] = JobRecord(
+                        job.job_id, job.job_class, job.user, device_id="",
+                        arrival_s=job.arrival_s, start_s=job.arrival_s,
+                        finish_s=job.arrival_s, service_s=0.0,
+                        num_steps=job.num_steps, oversubscribed=over)
+                    queue.append(QueuedJob(
+                        job, arrival_seq,
+                        service_s=cost.service_seconds(job, ref_hw),
+                        peak_hbm_bytes=peak,
+                        remaining_steps=job.num_steps, oversubscribed=over))
+                    arrival_seq += 1
+                else:
+                    qj, dev = payload
+                    dev.jobs_done += 1
+                    if qj.remaining_steps > 0:
+                        # preempted: re-sequenced to the BACK of the line,
+                        # so fifo + quantum is round-robin time-slicing;
+                        # service prediction shrinks to the REMAINING work
+                        # (sjf must order by what is left, not the original
+                        # total)
+                        qj.preemptions += 1
+                        records[qj.job.job_id].preemptions += 1
+                        qj.seq = arrival_seq
+                        arrival_seq += 1
+                        qj.service_s = qj.remaining_steps * cost.report(
+                            qj.job.job_class, ref_hw).total_seconds
+                        queue.append(qj)
+                    else:
+                        records[qj.job.job_id].finish_s = now
+            schedule_pass(now)
+
+        makespan = max((s.t1 for s in slices), default=0.0)
+        # acceptance invariant RHS, recomputed from the cost model: every
+        # run slice is `steps` Engine-simulated step makespans on its
+        # device's chip — must match the loop's accumulated busy time
+        hw_of = {d.device_id: d.hw for d in fleet}
+        engine_service = sum(
+            s.steps * cost.report(s.job_class, hw_of[s.device_id]).total_seconds
+            for s in slices if s.kind == "run")
+        hits, misses = cost.cache_stats()
+        ordered = [records[j.job_id] for j in trace.jobs]
+        return ClusterReport(
+            policy=self.policy.name,
+            trace_name=trace.name,
+            num_devices=len(fleet),
+            jobs=ordered,
+            slices=slices,
+            makespan_s=makespan,
+            fleet_busy_seconds=sum(d.busy_seconds for d in fleet),
+            fleet_setup_seconds=sum(d.setup_seconds for d in fleet),
+            per_device_busy={d.device_id: d.busy_seconds for d in fleet},
+            engine_service_seconds=engine_service,
+            hol_events=hol_events,
+            hol_blocked_jobs=tuple(hol_blocked),
+            hol_bypasses=hol_bypasses,
+            cache_hits=hits,
+            cache_misses=misses,
+        )

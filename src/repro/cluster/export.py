@@ -1,0 +1,141 @@
+"""Fleet-level exporters: chrome://tracing JSON, full-report JSON, ASCII.
+
+The fleet renderings reuse the conventions of :mod:`repro.analysis.export`
+one level up the stack: the Chrome trace uses the same Trace Event Format
+(one *track per device* instead of per functional unit, job slices as
+``ph: X`` duration events, queue depth as a ``ph: C`` counter), and the
+ASCII view shades per-device occupancy with the same
+:data:`~repro.analysis.export.SHADES` ramp the phase timeline uses — so a
+cluster report reads like a zoomed-out phase analysis.
+"""
+from __future__ import annotations
+
+import json
+from typing import List, Tuple
+
+from repro.analysis.export import SHADES, shade
+from repro.cluster.events import ClusterReport
+
+#: counter-track tid, placed after the per-device lanes
+_QUEUE_TID_OFFSET = 1000
+
+
+def _queue_depth_events(report: ClusterReport) -> List[Tuple[float, int]]:
+    """(time, +1/-1) waiting-job deltas, sorted.
+
+    A job waits from arrival to its first slice, and — when preempted —
+    over every gap between consecutive slices (the requeue).  At equal
+    times the +1 sorts first, so the running depth never dips negative.
+    """
+    by_job: dict = {}
+    for s in report.slices:
+        by_job.setdefault(s.job_id, []).append((s.t0, s.t1))
+    deltas: List[Tuple[float, int]] = []
+    for j in report.jobs:
+        prev_end = j.arrival_s
+        for t0, t1 in sorted(by_job.get(j.job_id, [])):
+            if t0 > prev_end:                      # waiting over [prev_end, t0]
+                deltas.append((prev_end, +1))
+                deltas.append((t0, -1))
+            prev_end = max(prev_end, t1)
+    return sorted(deltas, key=lambda d: (d[0], -d[1]))
+
+
+def fleet_chrome_trace(report: ClusterReport) -> str:
+    """Trace Event Format: one track per device + a queue-depth counter."""
+    device_ids = sorted(report.per_device_busy)
+    tid = {d: i for i, d in enumerate(device_ids)}
+    events: List[dict] = []
+    for d, i in tid.items():
+        events.append({"name": "thread_name", "ph": "M", "pid": 0, "tid": i,
+                       "args": {"name": d}})
+    by_id = {j.job_id: j for j in report.jobs}
+    for s in report.slices:
+        rec = by_id.get(s.job_id)
+        events.append({
+            "name": (f"{s.job_class}:{s.job_id}" if s.kind == "run"
+                     else f"setup:{s.job_class}"),
+            "cat": s.kind, "ph": "X",
+            "ts": s.t0 * 1e6, "dur": max((s.t1 - s.t0) * 1e6, 0.01),
+            "pid": 0, "tid": tid.get(s.device_id, len(tid)),
+            "args": {"job_class": s.job_class, "steps": s.steps,
+                     "user": rec.user if rec else "",
+                     "queue_delay_s": rec.queue_delay_s if rec else 0.0},
+        })
+    depth = 0
+    for t, delta in _queue_depth_events(report):
+        depth += delta
+        events.append({"name": "queue_depth", "cat": "queue", "ph": "C",
+                       "ts": t * 1e6, "pid": 0,
+                       "args": {"jobs_waiting": depth}})
+    return json.dumps({"traceEvents": events, "displayTimeUnit": "ns"})
+
+
+def to_json(report: ClusterReport, indent: int = None) -> str:
+    """Full report (summary + per-job records + slices) as one document."""
+    doc = {
+        "summary": report.summary(),
+        "reconcile_busy_rel_error": report.reconcile_busy(),
+        "hol_blocked_jobs": list(report.hol_blocked_jobs),
+        "per_device_busy": report.per_device_busy,
+        "jobs": [{
+            "job_id": j.job_id, "job_class": j.job_class, "user": j.user,
+            "device_id": j.device_id, "arrival_s": j.arrival_s,
+            "start_s": j.start_s, "finish_s": j.finish_s,
+            "service_s": j.service_s, "queue_delay_s": j.queue_delay_s,
+            "latency_s": j.latency_s, "num_steps": j.num_steps,
+            "preemptions": j.preemptions, "cold_starts": j.cold_starts,
+            "oversubscribed": j.oversubscribed,
+        } for j in report.jobs],
+        "slices": [{
+            "device_id": s.device_id, "job_id": s.job_id,
+            "job_class": s.job_class, "t0": s.t0, "t1": s.t1,
+            "kind": s.kind, "steps": s.steps,
+        } for s in report.slices],
+    }
+    return json.dumps(doc, indent=indent)
+
+
+def fleet_ascii(report: ClusterReport, width: int = 72) -> str:
+    """Terminal fleet view: queue-depth strip + one occupancy row per device.
+
+    Same visual grammar as the phase timeline's heat rows (the
+    :data:`SHADES` ramp), one row per device instead of per unit.
+    """
+    if not report.slices or report.makespan_s <= 0:
+        return "(empty fleet timeline)"
+    dt = report.makespan_s / width
+    device_ids = sorted(report.per_device_busy)
+
+    # queue-depth strip: max waiting jobs per column, digits (9+ -> '*')
+    depth_cols = [0] * width
+    depth, di = 0, 0
+    deltas = _queue_depth_events(report)
+    for col in range(width):
+        t1 = (col + 1) * dt
+        peak = depth
+        while di < len(deltas) and deltas[di][0] < t1:
+            depth += deltas[di][1]
+            peak = max(peak, depth)
+            di += 1
+        depth_cols[col] = peak
+    strip = "".join("*" if d > 9 else (str(d) if d else ".")
+                    for d in depth_cols)
+    lines = [f"{'queue':>13s} |{strip}|"]
+
+    for d in device_ids:
+        busy = [0.0] * width
+        for s in report.slices:
+            if s.device_id != d:
+                continue
+            c0 = min(int(s.t0 / dt), width - 1)
+            c1 = min(int(s.t1 / dt), width - 1)
+            for col in range(c0, c1 + 1):
+                lo, hi = col * dt, (col + 1) * dt
+                busy[col] += max(min(s.t1, hi) - max(s.t0, lo), 0.0)
+        lines.append(f"{d:>13s} |{''.join(shade(b / dt) for b in busy)}|")
+    lines.append(f"{'':>13s}  0s {'-' * max(width - 24, 4)} "
+                 f"{report.makespan_s:.3f}s")
+    lines.append(f"{'':>13s}  queue row: waiting jobs; device rows: "
+                 f"occupancy ({SHADES[1]}=idle..{SHADES[-1]}=busy)")
+    return "\n".join(lines)

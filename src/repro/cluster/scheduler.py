@@ -1,0 +1,154 @@
+"""Placement/queueing policies behind one ``Policy`` interface.
+
+The event loop (:mod:`repro.cluster.events`) calls
+:meth:`Policy.select` repeatedly whenever cluster state changes (an arrival
+or a completion): each call either places one queued job on one free device
+or returns ``None`` ("nothing more can start now").  Policies therefore
+never touch the clock or the heap — they are pure placement decisions, and
+a new policy is one small class registered in :data:`POLICIES`.
+
+Feasibility is shared across policies: a job *fits* a device when the cost
+model's ``peak_hbm_bytes`` (PR 3's live-range allocator high-water mark) is
+within the device's HBM.  A job too big for every chip in the fleet is
+flagged ``oversubscribed`` and allowed anywhere — the allocator reports
+oversubscription rather than refusing to run, and the cluster follows suit.
+
+Policies:
+
+* ``fifo``          — strict arrival order; the queue head blocks everyone
+                      behind it (the head-of-line-blocking baseline);
+* ``sjf``           — shortest predicted service (engine makespan x steps)
+                      first; the classic mean-delay optimizer;
+* ``best-fit-hbm``  — tightest-fitting (job peak-HBM vs device HBM) pair
+                      first, FIFO tie-break: keeps big-HBM slots free for
+                      big jobs on heterogeneous fleets;
+* ``locality``      — prefer a device that last ran the same class (skips
+                      the cold-start setup charge), FIFO otherwise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple, Type
+
+from repro.cluster.devices import DeviceSlot
+from repro.cluster.workload import Job
+
+
+@dataclass
+class QueuedJob:
+    """A job waiting for placement, with its precomputed cost features."""
+
+    job: Job
+    seq: int                      # arrival order (stable FIFO key)
+    service_s: float              # predicted service on the *reference* chip
+    peak_hbm_bytes: float
+    remaining_steps: int          # > 0 remainder when preempted
+    oversubscribed: bool = False  # fits no chip in the fleet; runs anyway
+    first_start_s: Optional[float] = None
+    preemptions: int = 0
+
+    def fits(self, dev: DeviceSlot) -> bool:
+        return self.oversubscribed or self.peak_hbm_bytes <= dev.hw.hbm_bytes
+
+
+class Policy:
+    """Base: subclasses override :meth:`select`."""
+
+    name = "base"
+
+    def select(self, queue: Sequence[QueuedJob], free: Sequence[DeviceSlot],
+               now: float) -> Optional[Tuple[QueuedJob, DeviceSlot]]:
+        """Pick one (job, free device) to start at ``now``, or ``None``.
+
+        The loop re-invokes until ``None``, so returning one placement per
+        call is enough; ``queue`` is in arrival order.
+        """
+        raise NotImplementedError
+
+    @staticmethod
+    def _first_fit(qj: QueuedJob, free: Sequence[DeviceSlot]
+                   ) -> Optional[DeviceSlot]:
+        for dev in free:
+            if qj.fits(dev):
+                return dev
+        return None
+
+
+class FIFO(Policy):
+    """Strict arrival order: only the queue head may start."""
+
+    name = "fifo"
+
+    def select(self, queue, free, now):
+        if not queue or not free:
+            return None
+        dev = self._first_fit(queue[0], free)
+        return (queue[0], dev) if dev is not None else None
+
+
+class SJF(Policy):
+    """Shortest predicted service first (non-preemptive)."""
+
+    name = "sjf"
+
+    def select(self, queue, free, now):
+        best = None
+        for qj in queue:
+            dev = self._first_fit(qj, free)
+            if dev is None:
+                continue
+            if best is None or (qj.service_s, qj.seq) < (best[0].service_s,
+                                                         best[0].seq):
+                best = (qj, dev)
+        return best
+
+
+class BestFitHBM(Policy):
+    """Tightest (device HBM - job peak HBM) fit first, FIFO tie-break.
+
+    Packing: on a mixed v5e/v5p fleet this parks small jobs on small chips
+    and keeps the big-HBM slots available for jobs only they can hold.
+    """
+
+    name = "best-fit-hbm"
+
+    def select(self, queue, free, now):
+        best = None
+        best_key = None
+        for qj in queue:
+            for dev in free:
+                if not qj.fits(dev):
+                    continue
+                key = (dev.hw.hbm_bytes - qj.peak_hbm_bytes, qj.seq)
+                if best_key is None or key < best_key:
+                    best, best_key = (qj, dev), key
+        return best
+
+
+class Locality(Policy):
+    """Warm-placement: FIFO order, but prefer a device whose previous job
+    was the same class — that start skips the cold-start setup charge."""
+
+    name = "locality"
+
+    def select(self, queue, free, now):
+        # only the head is considered (FIFO-style blocking, so the policy
+        # stays comparable to fifo on homogeneous fleets) — the warm
+        # preference just changes WHICH free device the head lands on
+        if not queue:
+            return None
+        head = queue[0]
+        warm = [d for d in free
+                if head.fits(d) and d.last_class == head.job.job_class]
+        dev = warm[0] if warm else self._first_fit(head, free)
+        return (head, dev) if dev is not None else None
+
+
+POLICIES: Dict[str, Type[Policy]] = {
+    p.name: p for p in (FIFO, SJF, BestFitHBM, Locality)}
+
+
+def make_policy(name: str) -> Policy:
+    if name not in POLICIES:
+        raise KeyError(f"unknown policy {name!r}; known: {sorted(POLICIES)}")
+    return POLICIES[name]()

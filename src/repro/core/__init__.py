@@ -19,7 +19,7 @@ from repro.core.capture import Captured, capture, capture_bundle
 from repro.core.collectives import collective_time
 from repro.core.correlate import CorrelationReport, correlate
 from repro.core.debug import Divergence, compare_implementations, first_divergence
-from repro.core.engine import Engine, SimReport
+from repro.core.engine import Engine, SimReport, SimulationCache
 from repro.core.functional import FunctionalResult, run_functional
 from repro.core.hlo_ir import SimModule, parse_hlo_module, summarize_collectives
 from repro.core.hw import CHIPS, V5E, V5P, HardwareSpec
@@ -68,6 +68,7 @@ class Simulator:
 
 __all__ = [
     "Simulator", "Captured", "capture", "capture_bundle", "Engine", "SimReport",
+    "SimulationCache",
     "SimModule", "parse_hlo_module", "summarize_collectives", "HardwareSpec",
     "V5E", "V5P", "CHIPS", "collective_time", "correlate", "CorrelationReport",
     "first_divergence", "compare_implementations", "Divergence",

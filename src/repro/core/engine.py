@@ -207,7 +207,9 @@ class SimReport:
             "total_ici_bytes": self.total_ici_bytes,
             "launch_overhead_seconds": self.launch_overhead_seconds,
             "peak_hbm_bytes": self.peak_hbm_bytes,
+            "peak_hbm_fraction": self.peak_hbm_fraction,
             "spill_bytes": self.spill_bytes,
+            "spill_fraction": self.spill_fraction,
             "channel_imbalance": self.channel_imbalance,
             **{f"unit_{k}_seconds": v for k, v in self.unit_seconds.items()},
             **{f"exposed_{k}_seconds": v
@@ -215,6 +217,55 @@ class SimReport:
             **{f"critical_path_{k}_seconds": v
                for k, v in self.critical_path_seconds.items()},
         }
+
+
+class SimulationCache:
+    """Keyed memo for :meth:`Engine.simulate` results.
+
+    Cluster runs (``repro.cluster``) re-simulate the same captured job class
+    thousands of times on identical ``(SimModule, window, HardwareSpec)``
+    inputs; the simulation is deterministic, so the second and later calls
+    can return the first call's :class:`SimReport` verbatim.  The key also
+    covers every Engine knob that changes the schedule (overlap, stream
+    count, memory model), so one cache can safely back heterogeneous
+    engines.  Modules are keyed by identity (and kept referenced so ids
+    cannot be recycled): two textually equal but distinct parses are
+    conservatively treated as different workloads.
+
+    Cached reports are returned *shared* — callers must treat them as
+    read-only.  ``hits``/``misses`` feed the cluster's hit-rate counter.
+    """
+
+    def __init__(self):
+        self.hits = 0
+        self.misses = 0
+        self._reports: Dict[tuple, SimReport] = {}
+        self._modules: Dict[int, SimModule] = {}   # pin ids (see docstring)
+
+    @staticmethod
+    def key(engine: "Engine", mod: SimModule,
+            window: Optional[Tuple[int, int]]) -> tuple:
+        return (id(mod), window, engine.hw, engine.overlap,
+                engine.num_compute_streams, engine.memory_model)
+
+    def lookup(self, key: tuple) -> Optional[SimReport]:
+        rep = self._reports.get(key)
+        if rep is not None:
+            self.hits += 1
+        return rep
+
+    def store(self, key: tuple, mod: SimModule, report: SimReport) -> None:
+        self.misses += 1
+        self._modules[id(mod)] = mod
+        self._reports[key] = report
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def __len__(self) -> int:
+        return len(self._reports)
 
 
 class Engine:
@@ -226,11 +277,15 @@ class Engine:
     (1 = serial TensorCore); ``memory_model=False`` falls back to the
     pre-memory-subsystem flat ``hbm`` clock (no placements, no per-channel
     contention, no VMEM spills) — the baseline the camping benchmark
-    measures dilation against.
+    measures dilation against.  ``cache`` (a :class:`SimulationCache`)
+    memoizes whole ``simulate`` calls on identical (module, window, spec)
+    inputs — the cluster simulator's per-job cost model shares one across
+    the fleet.
     """
 
     def __init__(self, hw: HardwareSpec = V5E, overlap_collectives: bool = True,
-                 num_compute_streams: int = 1, memory_model: bool = True):
+                 num_compute_streams: int = 1, memory_model: bool = True,
+                 cache: Optional[SimulationCache] = None):
         if num_compute_streams < 1:
             raise ValueError(
                 f"num_compute_streams must be >= 1, got {num_compute_streams}")
@@ -238,6 +293,7 @@ class Engine:
         self.overlap = overlap_collectives
         self.num_compute_streams = num_compute_streams
         self.memory_model = memory_model
+        self.cache = cache
 
     # ------------------------------------------------------------------
     def simulate(self, mod: SimModule, window: Optional[Tuple[int, int]] = None
@@ -250,6 +306,12 @@ class Engine:
         timeline entry."""
         if mod.entry is None:
             raise ValueError("module has no entry computation")
+
+        if self.cache is not None:
+            cache_key = SimulationCache.key(self, mod, window)
+            cached = self.cache.lookup(cache_key)
+            if cached is not None:
+                return cached
 
         from repro.memory import MemoryModel
         mem = MemoryModel(mod, self.hw) if self.memory_model else None
@@ -479,7 +541,7 @@ class Engine:
         exposed = self._exposure(timeline, ff_spans)
         critical_path = self._critical_path(nodes, state["makespan_node"])
         memmap = mem.finish() if mem is not None else None
-        return SimReport(
+        report = SimReport(
             total_seconds=total,
             compute_seconds=compute_seconds,
             ici_seconds=ici_seconds,
@@ -498,6 +560,9 @@ class Engine:
             channel_busy_seconds=list(mem.channel_busy) if mem else [],
             memory=memmap,
         )
+        if self.cache is not None:
+            self.cache.store(cache_key, mod, report)
+        return report
 
     # ------------------------------------------------------------------
     @staticmethod

@@ -1,0 +1,352 @@
+"""repro.cluster tests: hand-built 2-device/4-job traces with queueing
+delays computed by hand per policy, conservation (sum of job service time
+== fleet busy time), p95-latency monotonicity vs load, trace JSON
+round-trip, head-of-line-blocking counters, quantum time-slicing,
+cold-start/locality, and the Engine-level simulation cache."""
+import json
+
+import pytest
+
+from repro.cluster import (ClusterSim, Fleet, Job, JobClass, TableCostModel,
+                           Trace, bursty_trace, cost_model_for, fleet_ascii,
+                           fleet_chrome_trace, make_policy, percentile,
+                           poisson_trace, synthetic_module)
+from repro.core import Engine, SimulationCache, V5E, V5P
+
+GB = 1e9
+
+# ---------------------------------------------------------------------------
+# hand scenario: 2 identical devices, 1 long + 3 short jobs, all arrive at 0
+# ---------------------------------------------------------------------------
+
+_HAND_CLASSES = (JobClass("short", "lenet"), JobClass("long", "lenet"))
+_HAND_TABLE = {"short": (1.0, 1 * GB), "long": (4.0, 1 * GB)}
+
+
+def _hand_trace():
+    jobs = [Job("j0-long", "long", 0.0, 1),
+            Job("j1-short", "short", 0.0, 1),
+            Job("j2-short", "short", 0.0, 1),
+            Job("j3-short", "short", 0.0, 1)]
+    return Trace("hand", jobs, _HAND_CLASSES)
+
+
+def _run_hand(policy_name: str, devices: str = "2", **kw):
+    sim = ClusterSim(Fleet.from_spec(devices), TableCostModel(_HAND_TABLE),
+                     make_policy(policy_name), **kw)
+    return sim.run(_hand_trace())
+
+
+def _delays(report):
+    return {j.job_id: j.queue_delay_s for j in report.jobs}
+
+
+def test_fifo_exact_queueing_delays():
+    # dev0: long(0-4); dev1: short(0-1), short(1-2), short(2-3)
+    rep = _run_hand("fifo")
+    assert _delays(rep) == {"j0-long": 0.0, "j1-short": 0.0,
+                            "j2-short": 1.0, "j3-short": 2.0}
+    assert rep.makespan_s == 4.0
+    assert rep.mean_queue_delay_s == pytest.approx(0.75)
+
+
+def test_sjf_exact_queueing_delays():
+    # shorts first: dev0 short(0-1)+short(1-2), dev1 short(0-1)+long(1-5)
+    rep = _run_hand("sjf")
+    assert _delays(rep) == {"j0-long": 1.0, "j1-short": 0.0,
+                            "j2-short": 0.0, "j3-short": 1.0}
+    assert rep.makespan_s == 5.0
+    assert rep.mean_queue_delay_s == pytest.approx(0.5)
+    # sjf jumped the long head job at least once
+    assert rep.hol_bypasses >= 1
+
+
+@pytest.mark.parametrize("policy", ["fifo", "sjf", "best-fit-hbm",
+                                    "locality"])
+def test_conservation_service_equals_busy(policy):
+    rep = _run_hand(policy)
+    total_service = sum(j.service_s for j in rep.jobs)
+    assert rep.fleet_busy_seconds == pytest.approx(total_service, rel=1e-12)
+    assert total_service == pytest.approx(7.0)
+    # and the cost-model recomputation agrees (the acceptance invariant)
+    assert rep.reconcile_busy() <= 1e-9
+    # per-device busy sums to the fleet total
+    assert sum(rep.per_device_busy.values()) == pytest.approx(
+        rep.fleet_busy_seconds)
+
+
+def test_p95_latency_monotone_in_load():
+    """Same job population on a compressed arrival clock: p95 latency can
+    only get worse (the latency-vs-load curve the benchmark sweeps)."""
+    table = {"lenet": (0.002, 1 * GB), "llama3-8b": (0.02, 2 * GB),
+             "qwen3-moe-30b": (0.05, 4 * GB)}
+    p95 = []
+    for rate in (0.05, 0.5, 5.0):
+        trace = poisson_trace(n_jobs=30, rate_jobs_per_s=rate, seed=5)
+        sim = ClusterSim(Fleet.from_spec("2"), TableCostModel(table),
+                         make_policy("fifo"))
+        p95.append(sim.run(trace).latency_percentile(0.95))
+    assert p95[0] <= p95[1] <= p95[2]
+    assert p95[2] > p95[0]      # load actually bites at the top rate
+
+
+def test_trace_roundtrip_identical_report(tmp_path):
+    trace = bursty_trace(n_jobs=12, rate_jobs_per_s=4.0, seed=2)
+    path = str(tmp_path / "trace.json")
+    trace.save(path)
+    loaded = Trace.load(path)
+    assert loaded.jobs == trace.jobs
+    assert loaded.classes == trace.classes
+    table = {c.name: (0.01 * c.cost_scale, GB) for c in trace.classes}
+    runs = []
+    for t in (trace, loaded):
+        sim = ClusterSim(Fleet.from_spec("2"), TableCostModel(table),
+                         make_policy("sjf"))
+        runs.append(sim.run(t).summary())
+    assert runs[0] == runs[1]
+
+
+# ---------------------------------------------------------------------------
+# head-of-line blocking on a heterogeneous fleet
+# ---------------------------------------------------------------------------
+
+_HET_CLASSES = (JobClass("small", "lenet"), JobClass("huge", "lenet"))
+#: huge fits only the v5p (95 GiB); small fits anywhere
+_HET_TABLE = {"small": (1.0, 1 * GB), "huge": (2.0, 50 * GB)}
+
+
+def _het_trace():
+    jobs = [Job("j0-huge", "huge", 0.0, 1),
+            Job("j1-huge", "huge", 0.0, 1),
+            Job("j2-small", "small", 0.0, 1)]
+    return Trace("het", jobs, _HET_CLASSES)
+
+
+def _run_het(policy_name: str, spec: str = "1xtpu-v5e+1xtpu-v5p"):
+    sim = ClusterSim(Fleet.from_spec(spec), TableCostModel(_HET_TABLE),
+                     make_policy(policy_name))
+    return sim.run(_het_trace())
+
+
+def test_fifo_head_of_line_blocking():
+    # j0-huge takes the v5p; head j1-huge fits nothing free while j2-small
+    # could have used the idle v5e: the classic FIFO pathology
+    rep = _run_het("fifo")
+    assert rep.hol_events >= 1
+    assert "j1-huge" in rep.hol_blocked_jobs
+    assert _delays(rep)["j2-small"] == pytest.approx(2.0)  # waited for head
+
+
+def test_sjf_bypasses_blocked_head():
+    rep = _run_het("sjf")
+    assert _delays(rep)["j2-small"] == 0.0   # started on the idle v5e
+    assert rep.hol_bypasses >= 1
+
+
+def test_best_fit_hbm_keeps_big_slot_free():
+    # v5p listed FIRST: fifo parks the small job on it and blocks the big
+    # job; best-fit sends small to the v5e so both start at t=0
+    classes = (JobClass("small", "lenet"), JobClass("big", "lenet"))
+    table = {"small": (1.0, 1 * GB), "big": (1.0, 50 * GB)}
+    jobs = [Job("a-small", "small", 0.0, 1), Job("b-big", "big", 0.0, 1)]
+    trace = Trace("pack", jobs, classes)
+    out = {}
+    for policy in ("fifo", "best-fit-hbm"):
+        sim = ClusterSim(Fleet.from_spec("1xtpu-v5p+1xtpu-v5e"),
+                         TableCostModel(table), make_policy(policy))
+        out[policy] = _delays(sim.run(trace))
+    assert out["fifo"]["b-big"] == pytest.approx(1.0)
+    assert out["best-fit-hbm"] == {"a-small": 0.0, "b-big": 0.0}
+
+
+def test_oversubscribed_job_still_runs():
+    # bigger than every chip in the fleet: flagged, allowed anywhere
+    classes = (JobClass("way-too-big", "lenet"),)
+    table = {"way-too-big": (1.0, 500 * GB)}
+    trace = Trace("over", [Job("j0", "way-too-big", 0.0, 1)], classes)
+    sim = ClusterSim(Fleet.from_spec("1"), TableCostModel(table),
+                     make_policy("fifo"))
+    rep = sim.run(trace)
+    assert rep.jobs[0].oversubscribed
+    assert rep.jobs[0].finish_s == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# preemption + locality
+# ---------------------------------------------------------------------------
+
+def test_quantum_round_robin():
+    classes = (JobClass("c", "lenet"),)
+    table = {"c": (1.0, GB)}
+    jobs = [Job("j0", "c", 0.0, 2), Job("j1", "c", 0.0, 2)]
+    sim = ClusterSim(Fleet.from_spec("1"), TableCostModel(table),
+                     make_policy("fifo"), quantum_s=1.0)
+    rep = sim.run(Trace("rr", jobs, classes))
+    by_id = {j.job_id: j for j in rep.jobs}
+    # slices interleave: j0(0-1) j1(1-2) j0(2-3) j1(3-4)
+    assert by_id["j0"].finish_s == pytest.approx(3.0)
+    assert by_id["j1"].finish_s == pytest.approx(4.0)
+    assert by_id["j0"].preemptions == 1 and by_id["j1"].preemptions == 1
+    assert by_id["j0"].service_s == pytest.approx(2.0)
+    assert rep.fleet_busy_seconds == pytest.approx(4.0)
+    assert rep.reconcile_busy() <= 1e-9
+
+
+def test_sjf_orders_preempted_job_by_remaining_work():
+    # regression: a preempted job's service prediction must shrink to the
+    # REMAINING work — j0 (10x1s) preempted at t=9 has 1s left, so sjf runs
+    # it before j1 (2s), not after
+    classes = (JobClass("a", "lenet"), JobClass("b", "lenet"))
+    table = {"a": (1.0, GB), "b": (1.0, GB)}
+    jobs = [Job("j0", "a", 0.0, 10), Job("j1", "b", 0.5, 2)]
+    sim = ClusterSim(Fleet.from_spec("1"), TableCostModel(table),
+                     make_policy("sjf"), quantum_s=9.0)
+    rep = sim.run(Trace("pre-sjf", jobs, classes))
+    by_id = {j.job_id: j for j in rep.jobs}
+    assert by_id["j0"].finish_s == pytest.approx(10.0)
+    assert by_id["j1"].finish_s == pytest.approx(12.0)
+
+
+def test_queue_depth_never_negative_and_sees_requeues():
+    from repro.cluster.export import _queue_depth_events
+    # equal-time arrivals/starts must not dip the counter below zero
+    depth = 0
+    for _t, d in _queue_depth_events(_run_hand("fifo")):
+        depth += d
+        assert depth >= 0
+    # a preempted job's requeue wait shows up as a +1 at its preemption
+    classes = (JobClass("c", "lenet"),)
+    jobs = [Job("j0", "c", 0.0, 2), Job("j1", "c", 0.0, 2)]
+    sim = ClusterSim(Fleet.from_spec("1"), TableCostModel({"c": (1.0, GB)}),
+                     make_policy("fifo"), quantum_s=1.0)
+    rep = sim.run(Trace("rr", jobs, classes))
+    assert (1.0, +1) in _queue_depth_events(rep)   # j0 requeued over [1, 2]
+
+
+def test_locality_avoids_cold_starts():
+    classes = (JobClass("A", "lenet"), JobClass("B", "lenet"))
+    table = {"A": (1.0, GB), "B": (1.0, GB)}
+    jobs = [Job("j0", "A", 0.0, 1), Job("j1", "B", 0.0, 1),
+            Job("j2", "B", 0.0, 1), Job("j3", "A", 0.0, 1)]
+    setup = {}
+    for policy in ("fifo", "locality"):
+        sim = ClusterSim(Fleet.from_spec("2"), TableCostModel(table),
+                         make_policy(policy), cold_start_s=0.5)
+        rep = sim.run(Trace("warm", jobs, classes))
+        setup[policy] = rep.fleet_setup_seconds
+    # fifo re-cold-starts both devices in round 2; locality reuses them
+    assert setup["fifo"] == pytest.approx(2.0)
+    assert setup["locality"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# engine-backed cost model + the SimulationCache satellite
+# ---------------------------------------------------------------------------
+
+def test_engine_cost_model_cache_and_reconcile():
+    classes = (JobClass("tiny", "lenet", cost_scale=1.0, steps_lo=5,
+                        steps_hi=50, weight=1.0),
+               JobClass("big", "lenet", cost_scale=4.0, steps_lo=5,
+                        steps_hi=50, weight=1.0))
+    trace = poisson_trace(n_jobs=20, rate_jobs_per_s=50.0, classes=classes,
+                          seed=1)
+    cost = cost_model_for(trace, "synthetic")
+    sim = ClusterSim(Fleet.from_spec("2"), cost, make_policy("sjf"))
+    rep = sim.run(trace)
+    # one detailed simulation per (class, chip spec); everything else hits
+    assert rep.cache_misses == 2
+    assert rep.cache_hits > rep.cache_misses
+    assert rep.cache_hit_rate > 0.5
+    assert rep.reconcile_busy() <= 1e-9
+    assert rep.fleet_busy_seconds > 0
+
+
+def test_heterogeneous_fleet_prices_per_chip():
+    """The same class costs less on a v5p slot than a v5e slot — the cost
+    model consults the device's own HardwareSpec, not a global number."""
+    classes = (JobClass("c", "lenet", cost_scale=4.0),)
+    trace = Trace("het-price", [Job("j0", "c", 0.0, 10)], classes)
+    cost = cost_model_for(trace, "synthetic")
+    t_v5e = cost.report("c", V5E).total_seconds
+    t_v5p = cost.report("c", V5P).total_seconds
+    assert t_v5p < t_v5e
+    assert cost.cache.misses == 2      # one per chip spec
+
+
+def test_simulation_cache_engine_level():
+    mod = synthetic_module(4, 1024)
+    cache = SimulationCache()
+    eng = Engine(V5E, cache=cache)
+    r1 = eng.simulate(mod)
+    r2 = eng.simulate(mod)
+    assert r2 is r1                      # memoized, not re-simulated
+    assert (cache.hits, cache.misses) == (1, 1)
+    # a different chip spec through the SAME cache is a different key
+    r3 = Engine(V5P, cache=cache).simulate(mod)
+    assert r3 is not r1
+    assert cache.misses == 2
+    # uncached engines are unaffected
+    assert Engine(V5E).simulate(mod).total_seconds == r1.total_seconds
+    assert cache.hit_rate == pytest.approx(1 / 3)
+
+
+def test_simreport_summary_has_ratio_keys():
+    rep = Engine(V5E).simulate(synthetic_module(4, 1 << 16))
+    s = rep.summary()
+    assert s["peak_hbm_fraction"] == rep.peak_hbm_fraction
+    assert s["spill_fraction"] == rep.spill_fraction
+    assert s["channel_imbalance"] == rep.channel_imbalance
+    assert 0.0 < s["peak_hbm_fraction"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# fleet spec, exporters, helpers
+# ---------------------------------------------------------------------------
+
+def test_fleet_from_spec():
+    fleet = Fleet.from_spec("2xtpu-v5e+1xtpu-v5p")
+    assert len(fleet) == 3
+    assert [d.hw.name for d in fleet] == ["tpu-v5e", "tpu-v5e", "tpu-v5p"]
+    assert Fleet.from_spec("4").max_hbm_bytes() == V5E.hbm_bytes
+    with pytest.raises(KeyError):
+        Fleet.from_spec("2xtpu-v9000")
+    with pytest.raises(ValueError):
+        Fleet([])
+
+
+def test_fleet_exporters_smoke():
+    rep = _run_hand("fifo")
+    doc = json.loads(fleet_chrome_trace(rep))
+    names = [e["args"]["name"] for e in doc["traceEvents"]
+             if e["name"] == "thread_name"]
+    assert len(names) == 2               # one track per device
+    runs = [e for e in doc["traceEvents"] if e.get("cat") == "run"]
+    assert len(runs) == 4                # one slice per (unpreempted) job
+    ascii_view = fleet_ascii(rep, width=40)
+    assert "dev0:tpu-v5e" in ascii_view and "queue" in ascii_view
+    from repro.cluster import to_json as cluster_json
+    full = json.loads(cluster_json(rep))
+    assert full["summary"]["policy"] == "fifo"
+    assert len(full["jobs"]) == 4
+
+
+def test_percentile_helper():
+    assert percentile([], 0.95) == 0.0
+    assert percentile([3.0], 0.5) == 3.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0.5) == pytest.approx(2.5)
+    assert percentile([1.0, 2.0, 3.0, 4.0], 1.0) == 4.0
+
+
+def test_generators_deterministic_and_rate_scalable():
+    a = bursty_trace(n_jobs=10, rate_jobs_per_s=2.0, seed=9)
+    b = bursty_trace(n_jobs=10, rate_jobs_per_s=2.0, seed=9)
+    assert a.jobs == b.jobs
+    # same seed at a different rate: identical job POPULATION (class,
+    # steps, tenant), only the arrival clock changes
+    c = bursty_trace(n_jobs=10, rate_jobs_per_s=8.0, seed=9)
+    assert [(j.job_class, j.num_steps, j.user) for j in a.jobs] == \
+           [(j.job_class, j.num_steps, j.user) for j in c.jobs]
+    assert a.jobs != c.jobs
+    with pytest.raises(KeyError):
+        from repro.cluster import synthetic_trace
+        synthetic_trace("synthetic:nope")
