@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
   phase_analysis   — §V Fig. 4/5 repro.analysis phase breakdowns per workload
   memory_camping   — §V Fig. 22-25 per-channel HBM model: camping dilation
                      vs the flat-clock baseline, VMEM-spill column
+  topology_sweep   — repro.topology fabric sweep: ring/torus/fc all-reduce
+                     makespans, disjoint-link overlap vs the flat baseline
   cluster_policies — repro.cluster policy x arrival-rate sweep (queueing
                      delay / p95 latency / utilization per policy)
   checkpointing    — §III-F fidelity-switching checkpoint flow
@@ -27,13 +29,14 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 def main() -> None:
     from benchmarks import (checkpointing, cluster_policies, conv_algos,
                             correlation, kernels_bench, memory_camping,
-                            phase_analysis, power_breakdown)
+                            phase_analysis, power_breakdown, topology_sweep)
     sections = [
         ("correlation", correlation.run),
         ("power", power_breakdown.run),
         ("conv_algos", conv_algos.run),
         ("phase_analysis", phase_analysis.run),
         ("memory_camping", memory_camping.run),
+        ("topology_sweep", topology_sweep.run),
         ("cluster_policies", cluster_policies.run),
         ("checkpointing", checkpointing.run),
         ("kernels", kernels_bench.run),

@@ -16,6 +16,10 @@ Components
 * :mod:`repro.analysis.channels`  — aggregate the engine's per-op channel
   splits (``TimelineEntry.channel_bytes``, placed by :mod:`repro.memory`)
   and report the imbalance (the partition-camping detector, Fig. 22-25);
+* :mod:`repro.analysis.links`     — the same detector for the ICI fabric:
+  aggregate the engine's per-collective link splits
+  (``TimelineEntry.link_bytes``, lowered by :mod:`repro.topology`) and flag
+  *link camping* (one mesh axis' links gating the fabric);
 * :mod:`repro.analysis.export`    — JSON / chrome://tracing / terminal ASCII
   renderings of all of the above.
 
@@ -49,6 +53,8 @@ from repro.analysis.channels import (CAMPING_OPS, ChannelReport,
 from repro.analysis.export import ascii_timeline, to_chrome_trace, to_json
 from repro.analysis.intervals import (Interval, IntervalProfile, UNITS,
                                       profile_intervals)
+from repro.analysis.links import (LINK_CAMPING_THRESHOLD, LinkReport,
+                                  link_traffic)
 from repro.analysis.phases import (Phase, label_interval, phase_table,
                                    segment_phases)
 from repro.core.engine import SimReport
@@ -63,6 +69,9 @@ class AnalysisReport:
     profile: IntervalProfile
     phases: List[Phase]
     channels: ChannelReport
+    #: per-ICI-link traffic view (the fabric camping detector); None only on
+    #: reports built by pre-topology callers that bypass :func:`analyze`
+    links: Optional[LinkReport] = None
 
     def phase_table(self) -> str:
         return phase_table(self.phases)
@@ -84,11 +93,12 @@ class AnalysisReport:
 def analyze(report: SimReport, num_buckets: int = 120,
             hw: Optional[HardwareSpec] = None,
             min_phase_intervals: int = 2) -> AnalysisReport:
-    """One-call pipeline: intervals -> phases -> channels."""
+    """One-call pipeline: intervals -> phases -> channels -> links."""
     profile = profile_intervals(report, num_buckets)
     phases = segment_phases(profile, min_intervals=min_phase_intervals)
     channels = channel_traffic(report, hw)
-    return AnalysisReport(report, profile, phases, channels)
+    links = link_traffic(report)
+    return AnalysisReport(report, profile, phases, channels, links)
 
 
 __all__ = [
@@ -96,5 +106,6 @@ __all__ = [
     "Interval", "IntervalProfile", "profile_intervals", "UNITS",
     "Phase", "segment_phases", "label_interval", "phase_table",
     "ChannelReport", "channel_traffic", "CAMPING_OPS",
+    "LinkReport", "link_traffic", "LINK_CAMPING_THRESHOLD",
     "to_json", "to_chrome_trace", "ascii_timeline",
 ]

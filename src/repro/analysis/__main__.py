@@ -37,6 +37,12 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--no-memory", action="store_true",
                    help="disable the repro.memory hierarchy (flat HBM "
                         "clock, no placements/spills) — the legacy model")
+    p.add_argument("--topology", metavar="SPEC",
+                   help="override the chip's ICI fabric spec "
+                        "(ring | ring:N | torus:AxB[xC] | fc[:N])")
+    p.add_argument("--no-topology", action="store_true",
+                   help="disable the repro.topology fabric (flat analytic "
+                        "ICI clock, no per-link contention)")
     p.add_argument("--chrome-trace", metavar="PATH",
                    help="write chrome://tracing JSON here ('-' for stdout)")
     p.add_argument("--json", metavar="PATH",
@@ -72,9 +78,21 @@ def main(argv=None) -> int:
                           global_batch=args.batch, kind="train")
     rc = C.RunConfig(model=model_cfg, shape=shape, mesh=C.SMOKE_MESH)
 
-    sim = Simulator(hw=CHIPS[args.hw],
+    hw = CHIPS[args.hw]
+    if args.topology:
+        import dataclasses
+
+        from repro.topology import Topology
+        try:
+            Topology.validate_spec(args.topology)
+        except KeyError as e:
+            print(e.args[0], file=sys.stderr)
+            return 2
+        hw = dataclasses.replace(hw, ici_topology=args.topology)
+    sim = Simulator(hw=hw,
                     overlap_collectives=not args.no_overlap,
-                    memory_model=not args.no_memory)
+                    memory_model=not args.no_memory,
+                    topology_model=not args.no_topology)
     print(f"capturing {args.arch} train step "
           f"(seq={args.seq_len}, batch={args.batch}, {args.hw}) ...",
           file=sys.stderr)
@@ -102,6 +120,12 @@ def main(argv=None) -> int:
     print(ar.ascii_timeline(width=args.width))
     print()
     print(ar.channels.table())
+    if ar.links is not None and ar.links.num_links:
+        print()
+        print(ar.links.table())
+        print(f"   fabric: {rep.hw.ici_topology}, link imbalance "
+              f"{s['link_imbalance']:.2f}, link busy "
+              f"{s['link_busy_total_seconds'] * 1e3:.3f} ms summed")
     print(f"\nbucket<->summary reconciliation: max rel error "
           f"{ar.reconcile() * 100:.3f}%")
 

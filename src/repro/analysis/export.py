@@ -74,6 +74,15 @@ def to_json(analysis, indent: int = None) -> str:
             "hot_contributors": analysis.channels.hot_contributors,
         },
     }
+    if analysis.links is not None:
+        doc["links"] = {
+            "link_bytes": analysis.links.link_bytes,
+            "imbalance": analysis.links.imbalance,
+            "camped": analysis.links.camped,
+            "hot_link": analysis.links.hot_link,
+            "hot_contributors": analysis.links.hot_contributors,
+            "link_busy_seconds": analysis.report.link_busy_seconds,
+        }
     return json.dumps(doc, indent=indent)
 
 
@@ -99,6 +108,16 @@ def to_chrome_trace(analysis) -> str:
             "ts": iv.t0 * 1e6, "pid": 0,
             "args": {u: round(iv.occupancy(u), 4) for u in UNITS},
         })
+    # per-link counter track: one sample per collective op, so Perfetto
+    # shows WHICH fabric links each transfer landed on over time
+    for e in analysis.report.timeline:
+        if e.unit == "ici" and getattr(e, "link_bytes", None):
+            events.append({
+                "name": "link_bytes", "cat": "link", "ph": "C",
+                "ts": e.start * 1e6, "pid": 0,
+                "args": {l: round(b * e.scale, 1)
+                         for l, b in sorted(e.link_bytes.items())},
+            })
     return json.dumps({"traceEvents": events, "displayTimeUnit": "ns"})
 
 

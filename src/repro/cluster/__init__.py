@@ -50,13 +50,15 @@ from repro.cluster.events import (ClusterReport, ClusterSim, JobRecord,
 from repro.cluster.export import fleet_ascii, fleet_chrome_trace, to_json
 from repro.cluster.scheduler import (POLICIES, BestFitHBM, FIFO, Locality,
                                      Policy, QueuedJob, SJF, make_policy)
-from repro.cluster.workload import (DEFAULT_CLASSES, GENERATORS, Job,
-                                    JobClass, Trace, bursty_trace,
+from repro.cluster.workload import (DEFAULT_CLASSES, GENERATORS,
+                                    MULTISLICE_CLASSES, Job, JobClass, Trace,
+                                    bursty_trace, multislice_trace,
                                     poisson_trace, synthetic_trace)
 
 __all__ = [
-    "Job", "JobClass", "Trace", "DEFAULT_CLASSES", "GENERATORS",
-    "poisson_trace", "bursty_trace", "synthetic_trace",
+    "Job", "JobClass", "Trace", "DEFAULT_CLASSES", "MULTISLICE_CLASSES",
+    "GENERATORS",
+    "poisson_trace", "bursty_trace", "multislice_trace", "synthetic_trace",
     "DeviceSlot", "Fleet", "CostModel", "TableCostModel", "cost_model_for",
     "captured_modules", "synthetic_modules", "synthetic_module",
     "Policy", "QueuedJob", "FIFO", "SJF", "BestFitHBM", "Locality",

@@ -29,13 +29,20 @@ def build_parser() -> argparse.ArgumentParser:
         description="Trace-driven multi-tenant fleet simulation on top of "
                     "the device Engine.")
     p.add_argument("--trace", default="synthetic:poisson",
-                   help="'synthetic:poisson' | 'synthetic:bursty' | path to "
-                        "a saved trace JSON (default synthetic:poisson)")
+                   help="'synthetic:poisson' | 'synthetic:bursty' | "
+                        "'synthetic:multislice' (multi-device gang jobs) | "
+                        "path to a saved trace JSON "
+                        "(default synthetic:poisson)")
     p.add_argument("--policy", default="fifo",
                    help="fifo | sjf | best-fit-hbm | locality")
     p.add_argument("--devices", default="4",
                    help="fleet spec: '4' (v5e), '4xtpu-v5p', or "
                         "'2xtpu-v5e+2xtpu-v5p'")
+    p.add_argument("--topology", metavar="SPEC", default=None,
+                   help="fleet interconnect: 'ring', 'torus:4x4', 'fc' — "
+                        "enables topology-aware (minimal-diameter sub-slice) "
+                        "placement of multi-device jobs under "
+                        "--policy locality")
     p.add_argument("--jobs", type=int, default=40,
                    help="synthetic traces: number of jobs (default 40)")
     p.add_argument("--rate", type=float, default=1.0,
@@ -72,7 +79,7 @@ def main(argv=None) -> int:
 
     try:
         policy = make_policy(args.policy)
-        fleet = Fleet.from_spec(args.devices)
+        fleet = Fleet.from_spec(args.devices, topology=args.topology)
         if args.trace.startswith("synthetic"):
             trace = synthetic_trace(args.trace, n_jobs=args.jobs,
                                     rate_jobs_per_s=args.rate,
@@ -80,7 +87,7 @@ def main(argv=None) -> int:
         else:
             trace = Trace.load(args.trace)
         cost = cost_model_for(trace, args.cost)
-    except (KeyError, FileNotFoundError) as e:
+    except (KeyError, ValueError, FileNotFoundError) as e:
         # KeyError's str() wraps the message in quotes; FileNotFoundError's
         # args[0] is a bare errno int — unpack each to the readable form
         print(e.args[0] if isinstance(e, KeyError) else str(e),
@@ -92,8 +99,9 @@ def main(argv=None) -> int:
         print(f"wrote {args.save_trace}", file=sys.stderr)
 
     classes = sorted({j.job_class for j in trace.jobs})
+    topo_note = f", topology={fleet.topology.name}" if fleet.topology else ""
     print(f"simulating {len(trace.jobs)} jobs ({', '.join(classes)}) on "
-          f"{len(fleet)} devices, policy={policy.name}, "
+          f"{len(fleet)} devices{topo_note}, policy={policy.name}, "
           f"cost={args.cost} ...", file=sys.stderr)
     sim = ClusterSim(fleet, cost, policy, cold_start_s=args.cold_start,
                      quantum_s=args.quantum)

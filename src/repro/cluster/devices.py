@@ -34,6 +34,7 @@ from repro.cluster.workload import Job, Trace
 from repro.core.engine import Engine, SimReport, SimulationCache
 from repro.core.hlo_ir import SimModule, parse_hlo_module
 from repro.core.hw import CHIPS, V5E, HardwareSpec
+from repro.topology import Topology
 
 
 @dataclass
@@ -50,12 +51,25 @@ class DeviceSlot:
 
 
 class Fleet:
-    """An ordered set of device slots."""
+    """An ordered set of device slots, optionally arranged on a topology.
 
-    def __init__(self, slots: List[DeviceSlot]):
+    ``topology`` (a :class:`repro.topology.Topology` whose node *positions*
+    map 1:1 onto slot indices) gives the fleet an interconnect shape: the
+    ``locality`` policy then places multi-device gang jobs on
+    minimal-diameter sub-slices of it.  A fleet without a topology behaves
+    exactly as before (placement ignores distance).
+    """
+
+    def __init__(self, slots: List[DeviceSlot],
+                 topology: Optional[Topology] = None):
         if not slots:
             raise ValueError("fleet needs at least one device slot")
+        if topology is not None and topology.num_devices != len(slots):
+            raise ValueError(
+                f"topology {topology.name} has {topology.num_devices} nodes "
+                f"but the fleet has {len(slots)} slots")
         self.slots = slots
+        self.topology = topology
 
     def __len__(self) -> int:
         return len(self.slots)
@@ -70,8 +84,14 @@ class Fleet:
         return max(d.hw.hbm_bytes for d in self.slots)
 
     @classmethod
-    def from_spec(cls, spec: str) -> "Fleet":
-        """``"4"`` -> 4x v5e; ``"4xtpu-v5p"``; ``"2xtpu-v5e+2xtpu-v5p"``."""
+    def from_spec(cls, spec: str,
+                  topology: Optional[str] = None) -> "Fleet":
+        """``"4"`` -> 4x v5e; ``"4xtpu-v5p"``; ``"2xtpu-v5e+2xtpu-v5p"``.
+
+        ``topology`` is an optional fabric spec (``"ring"``,
+        ``"torus:4x4"``, ``"fc"``) instantiated over the fleet's slot
+        count; a sized spec must match it exactly.
+        """
         slots: List[DeviceSlot] = []
         for part in str(spec).split("+"):
             part = part.strip()
@@ -84,7 +104,9 @@ class Fleet:
                 raise KeyError(f"unknown chip {chip!r}; known: {sorted(CHIPS)}")
             for _ in range(count):
                 slots.append(DeviceSlot(f"dev{len(slots)}:{chip}", CHIPS[chip]))
-        return cls(slots)
+        topo = Topology.from_spec(topology, n=len(slots)) \
+            if topology is not None else None
+        return cls(slots, topology=topo)
 
 
 # ---------------------------------------------------------------------------

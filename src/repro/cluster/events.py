@@ -1,8 +1,10 @@
 """The discrete-event cluster loop and its :class:`ClusterReport`.
 
 A classic event-heap simulator on a virtual clock: ARRIVAL events come from
-the trace, START decisions from the :class:`~repro.cluster.scheduler.Policy`,
-FINISH/PREEMPT events from the cost model's per-device service times.  All
+the trace, START decisions from the :class:`~repro.cluster.scheduler.Policy`
+(for multi-device jobs: a whole gang of devices held in lockstep, priced at
+the slowest member's engine makespan), FINISH/PREEMPT events from the cost
+model's per-device service times.  All
 state changes happen at event times; between events nothing moves, so the
 loop is O(events log events) regardless of how long the simulated horizon
 is.  Determinism: events at equal times drain in insertion order (a
@@ -77,7 +79,14 @@ class JobRecord:
 
 @dataclass
 class Slice:
-    """One contiguous occupancy of one device (setup or run)."""
+    """One contiguous occupancy of one device (setup or run).
+
+    A multi-device gang job produces one run slice PER occupied device;
+    ``group`` then lists every device id in the gang (empty for the common
+    single-device case) so the reconciliation can re-price the slice at the
+    gang's step time — the SLOWEST member's engine makespan, since gang
+    members step in lockstep.
+    """
 
     device_id: str
     job_id: str
@@ -86,6 +95,7 @@ class Slice:
     t1: float
     kind: str = "run"             # "run" | "setup"
     steps: int = 0                # training steps executed in this slice
+    group: Tuple[str, ...] = ()   # gang device ids (multi-device jobs)
 
 
 @dataclass
@@ -199,6 +209,8 @@ class ClusterSim:
         for dev in fleet:            # reset between runs: fleets are reusable
             dev.free_at = dev.busy_seconds = dev.setup_seconds = 0.0
             dev.jobs_done, dev.last_class = 0, None
+        # hand the policy the fleet's shape (topology + id->position map)
+        self.policy.bind_fleet(fleet)
 
         ref_hw = fleet.slots[0].hw   # service predictions for SJF ordering
         max_hbm = fleet.max_hbm_bytes()
@@ -215,39 +227,47 @@ class ClusterSim:
         hol_blocked: List[str] = []
         hol_bypasses = 0
 
-        def start_one(qj: QueuedJob, dev: DeviceSlot, now: float) -> float:
+        def start_one(qj: QueuedJob, devs: Tuple[DeviceSlot, ...],
+                      now: float) -> float:
             nonlocal seq
             job = qj.job
-            per_step = cost.report(job.job_class, dev.hw).total_seconds
-            setup = 0.0
-            if self.cold_start_s > 0 and dev.last_class != job.job_class:
-                setup = self.cold_start_s
-                records[job.job_id].cold_starts += 1
+            # gang members step in LOCKSTEP, so the slowest chip's engine
+            # makespan prices the whole gang's step
+            per_step = max(cost.report(job.job_class, d.hw).total_seconds
+                           for d in devs)
+            cold = [d for d in devs
+                    if self.cold_start_s > 0 and d.last_class != job.job_class]
+            setup = self.cold_start_s if cold else 0.0
+            records[job.job_id].cold_starts += len(cold)
             steps = qj.remaining_steps
             if self.quantum_s is not None and per_step > 0:
                 steps = min(steps, max(int(self.quantum_s / per_step), 1))
             run_s = steps * per_step
-            t0 = max(now, dev.free_at)
-            if setup > 0:
-                slices.append(Slice(dev.device_id, job.job_id, job.job_class,
-                                    t0, t0 + setup, kind="setup"))
-            slices.append(Slice(dev.device_id, job.job_id, job.job_class,
-                                t0 + setup, t0 + setup + run_s, steps=steps))
-            dev.free_at = t0 + setup + run_s
-            dev.busy_seconds += run_s
-            dev.setup_seconds += setup
-            dev.last_class = job.job_class
+            t0 = max([now] + [d.free_at for d in devs])
+            group = tuple(d.device_id for d in devs) if len(devs) > 1 else ()
+            for d in devs:
+                if d in cold:
+                    slices.append(Slice(d.device_id, job.job_id,
+                                        job.job_class, t0, t0 + setup,
+                                        kind="setup", group=group))
+                slices.append(Slice(d.device_id, job.job_id, job.job_class,
+                                    t0 + setup, t0 + setup + run_s,
+                                    steps=steps, group=group))
+                d.free_at = t0 + setup + run_s
+                d.busy_seconds += run_s
+                d.setup_seconds += setup if d in cold else 0.0
+                d.last_class = job.job_class
             rec = records[job.job_id]
             if qj.first_start_s is None:
                 qj.first_start_s = t0
                 rec.start_s = t0
             rec.service_s += run_s
-            rec.device_id = dev.device_id
+            rec.device_id = "+".join(d.device_id for d in devs)
             qj.remaining_steps -= steps
-            heapq.heappush(heap, (dev.free_at, seq, _FINISH,
-                                  (qj, dev)))
+            finish = t0 + setup + run_s
+            heapq.heappush(heap, (finish, seq, _FINISH, (qj, devs)))
             seq += 1
-            return dev.free_at
+            return finish
 
         def schedule_pass(now: float) -> None:
             nonlocal hol_events, hol_bypasses
@@ -267,12 +287,12 @@ class ClusterSim:
                         if head.job.job_id not in hol_blocked:
                             hol_blocked.append(head.job.job_id)
                     return
-                qj, dev = sel
+                qj, devs = sel
                 if any(other.seq < qj.seq for other in queue
                        if other is not qj):
                     hol_bypasses += 1
                 queue.remove(qj)
-                start_one(qj, dev, now)
+                start_one(qj, devs, now)
 
         arrival_seq = 0
         while heap:
@@ -282,8 +302,15 @@ class ClusterSim:
                 _t, _s, kind, payload = heapq.heappop(heap)
                 if kind == _ARRIVAL:
                     job: Job = payload
-                    peak = cost.peak_hbm_bytes(job.job_class, ref_hw)
-                    over = peak > max_hbm
+                    # gangs larger than the fleet are clamped (and flagged):
+                    # the job runs degraded rather than queueing forever
+                    nd = max(getattr(job, "num_devices", 1), 1)
+                    clamped = nd > len(fleet)
+                    nd = min(nd, len(fleet))
+                    # sharded-model assumption: the gang splits the class's
+                    # peak footprint evenly across its devices
+                    peak = cost.peak_hbm_bytes(job.job_class, ref_hw) / nd
+                    over = clamped or peak > max_hbm
                     records[job.job_id] = JobRecord(
                         job.job_id, job.job_class, job.user, device_id="",
                         arrival_s=job.arrival_s, start_s=job.arrival_s,
@@ -293,11 +320,13 @@ class ClusterSim:
                         job, arrival_seq,
                         service_s=cost.service_seconds(job, ref_hw),
                         peak_hbm_bytes=peak,
-                        remaining_steps=job.num_steps, oversubscribed=over))
+                        remaining_steps=job.num_steps, num_devices=nd,
+                        oversubscribed=over))
                     arrival_seq += 1
                 else:
-                    qj, dev = payload
-                    dev.jobs_done += 1
+                    qj, devs = payload
+                    for dev in devs:
+                        dev.jobs_done += 1
                     if qj.remaining_steps > 0:
                         # preempted: re-sequenced to the BACK of the line,
                         # so fifo + quantum is round-robin time-slicing;
@@ -318,10 +347,12 @@ class ClusterSim:
         makespan = max((s.t1 for s in slices), default=0.0)
         # acceptance invariant RHS, recomputed from the cost model: every
         # run slice is `steps` Engine-simulated step makespans on its
-        # device's chip — must match the loop's accumulated busy time
+        # device's chip (for gangs: the slowest member's chip, the lockstep
+        # price) — must match the loop's accumulated busy time
         hw_of = {d.device_id: d.hw for d in fleet}
         engine_service = sum(
-            s.steps * cost.report(s.job_class, hw_of[s.device_id]).total_seconds
+            s.steps * max(cost.report(s.job_class, hw_of[d]).total_seconds
+                          for d in (s.group or (s.device_id,)))
             for s in slices if s.kind == "run")
         hits, misses = cost.cache_stats()
         ordered = [records[j.job_id] for j in trace.jobs]

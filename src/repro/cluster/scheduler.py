@@ -2,16 +2,21 @@
 
 The event loop (:mod:`repro.cluster.events`) calls
 :meth:`Policy.select` repeatedly whenever cluster state changes (an arrival
-or a completion): each call either places one queued job on one free device
-or returns ``None`` ("nothing more can start now").  Policies therefore
-never touch the clock or the heap — they are pure placement decisions, and
-a new policy is one small class registered in :data:`POLICIES`.
+or a completion): each call either places one queued job on a tuple of free
+devices or returns ``None`` ("nothing more can start now").  Policies
+therefore never touch the clock or the heap — they are pure placement
+decisions, and a new policy is one small class registered in
+:data:`POLICIES`.
 
-Feasibility is shared across policies: a job *fits* a device when the cost
-model's ``peak_hbm_bytes`` (PR 3's live-range allocator high-water mark) is
-within the device's HBM.  A job too big for every chip in the fleet is
-flagged ``oversubscribed`` and allowed anywhere — the allocator reports
-oversubscription rather than refusing to run, and the cluster follows suit.
+Jobs may be *multi-device gangs* (``QueuedJob.num_devices > 1``): a
+placement is then a tuple of that many free devices held simultaneously.
+Feasibility is shared across policies: a job *fits* a device when its
+per-device share of the cost model's ``peak_hbm_bytes`` (PR 3's live-range
+allocator high-water mark, divided across the gang — the sharded-model
+assumption) is within the device's HBM.  A job too big for every chip in
+the fleet is flagged ``oversubscribed`` and allowed anywhere — the
+allocator reports oversubscription rather than refusing to run, and the
+cluster follows suit.
 
 Policies:
 
@@ -22,15 +27,23 @@ Policies:
 * ``best-fit-hbm``  — tightest-fitting (job peak-HBM vs device HBM) pair
                       first, FIFO tie-break: keeps big-HBM slots free for
                       big jobs on heterogeneous fleets;
-* ``locality``      — prefer a device that last ran the same class (skips
-                      the cold-start setup charge), FIFO otherwise.
+* ``locality``      — topology-aware placement.  Single-device jobs prefer
+                      a device that last ran the same class (skips the
+                      cold-start setup charge).  Multi-device gangs are
+                      placed on the *minimal-diameter sub-slice* of the
+                      fleet's interconnect :class:`~repro.topology.Topology`
+                      whose devices are all free — a 2x2 torus block beats
+                      four scattered chips, because the gang's collectives
+                      then run over short disjoint links.  Policies receive
+                      the fleet (and its topology) via :meth:`Policy.
+                      bind_fleet` at the start of every run.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Dict, Optional, Sequence, Tuple, Type
 
-from repro.cluster.devices import DeviceSlot
+from repro.cluster.devices import DeviceSlot, Fleet
 from repro.cluster.workload import Job
 
 
@@ -41,8 +54,9 @@ class QueuedJob:
     job: Job
     seq: int                      # arrival order (stable FIFO key)
     service_s: float              # predicted service on the *reference* chip
-    peak_hbm_bytes: float
+    peak_hbm_bytes: float         # PER-DEVICE footprint (peak / num_devices)
     remaining_steps: int          # > 0 remainder when preempted
+    num_devices: int = 1          # gang footprint (clamped to fleet size)
     oversubscribed: bool = False  # fits no chip in the fleet; runs anyway
     first_start_s: Optional[float] = None
     preemptions: int = 0
@@ -56,9 +70,20 @@ class Policy:
 
     name = "base"
 
+    def __init__(self):
+        self.topology = None                       # set by bind_fleet
+        self._node_of: Dict[str, int] = {}
+
+    def bind_fleet(self, fleet: Fleet) -> None:
+        """Give the policy the fleet's shape (called once per run): the
+        interconnect topology and the device-id -> topology-position map."""
+        self.topology = fleet.topology
+        self._node_of = {d.device_id: i for i, d in enumerate(fleet.slots)}
+
     def select(self, queue: Sequence[QueuedJob], free: Sequence[DeviceSlot],
-               now: float) -> Optional[Tuple[QueuedJob, DeviceSlot]]:
-        """Pick one (job, free device) to start at ``now``, or ``None``.
+               now: float
+               ) -> Optional[Tuple[QueuedJob, Tuple[DeviceSlot, ...]]]:
+        """Pick one (job, free-device gang) to start at ``now``, or ``None``.
 
         The loop re-invokes until ``None``, so returning one placement per
         call is enough; ``queue`` is in arrival order.
@@ -67,11 +92,12 @@ class Policy:
 
     @staticmethod
     def _first_fit(qj: QueuedJob, free: Sequence[DeviceSlot]
-                   ) -> Optional[DeviceSlot]:
-        for dev in free:
-            if qj.fits(dev):
-                return dev
-        return None
+                   ) -> Optional[Tuple[DeviceSlot, ...]]:
+        """First ``num_devices`` free fitting slots, or ``None``."""
+        picked = [d for d in free if qj.fits(d)][:qj.num_devices]
+        if len(picked) < qj.num_devices:
+            return None
+        return tuple(picked)
 
 
 class FIFO(Policy):
@@ -82,8 +108,8 @@ class FIFO(Policy):
     def select(self, queue, free, now):
         if not queue or not free:
             return None
-        dev = self._first_fit(queue[0], free)
-        return (queue[0], dev) if dev is not None else None
+        devs = self._first_fit(queue[0], free)
+        return (queue[0], devs) if devs is not None else None
 
 
 class SJF(Policy):
@@ -94,12 +120,12 @@ class SJF(Policy):
     def select(self, queue, free, now):
         best = None
         for qj in queue:
-            dev = self._first_fit(qj, free)
-            if dev is None:
+            devs = self._first_fit(qj, free)
+            if devs is None:
                 continue
             if best is None or (qj.service_s, qj.seq) < (best[0].service_s,
                                                          best[0].seq):
-                best = (qj, dev)
+                best = (qj, devs)
         return best
 
 
@@ -108,6 +134,8 @@ class BestFitHBM(Policy):
 
     Packing: on a mixed v5e/v5p fleet this parks small jobs on small chips
     and keeps the big-HBM slots available for jobs only they can hold.
+    Multi-device gangs take the tightest-fitting slots (slack summed over
+    the gang).
     """
 
     name = "best-fit-hbm"
@@ -116,32 +144,57 @@ class BestFitHBM(Policy):
         best = None
         best_key = None
         for qj in queue:
-            for dev in free:
-                if not qj.fits(dev):
-                    continue
-                key = (dev.hw.hbm_bytes - qj.peak_hbm_bytes, qj.seq)
-                if best_key is None or key < best_key:
-                    best, best_key = (qj, dev), key
+            fitting = sorted((d for d in free if qj.fits(d)),
+                             key=lambda d: d.hw.hbm_bytes)
+            if len(fitting) < qj.num_devices:
+                continue
+            devs = tuple(fitting[:qj.num_devices])
+            slack = sum(d.hw.hbm_bytes - qj.peak_hbm_bytes for d in devs)
+            key = (slack, qj.seq)
+            if best_key is None or key < best_key:
+                best, best_key = (qj, devs), key
         return best
 
 
 class Locality(Policy):
-    """Warm-placement: FIFO order, but prefer a device whose previous job
-    was the same class — that start skips the cold-start setup charge."""
+    """Topology-aware placement, FIFO order.
+
+    Single-device head: prefer a free device whose previous job was the
+    same class (that start skips the cold-start setup charge) — the
+    original warm-placement behavior.  Multi-device head: walk the
+    interconnect topology's sub-slices best (smallest diameter) first and
+    take the first one whose devices are all free and fitting, so gang
+    collectives run over a compact block of links.  Without a fleet
+    topology, gangs fall back to first-fit.
+    """
 
     name = "locality"
 
     def select(self, queue, free, now):
         # only the head is considered (FIFO-style blocking, so the policy
-        # stays comparable to fifo on homogeneous fleets) — the warm
-        # preference just changes WHICH free device the head lands on
+        # stays comparable to fifo on homogeneous fleets) — the preference
+        # just changes WHICH free devices the head lands on
         if not queue:
             return None
         head = queue[0]
-        warm = [d for d in free
-                if head.fits(d) and d.last_class == head.job.job_class]
-        dev = warm[0] if warm else self._first_fit(head, free)
-        return (head, dev) if dev is not None else None
+        if head.num_devices <= 1:
+            warm = [d for d in free
+                    if head.fits(d) and d.last_class == head.job.job_class]
+            devs = (warm[0],) if warm else self._first_fit(head, free)
+        else:
+            devs = self._best_slice(head, free)
+        return (head, devs) if devs is not None else None
+
+    def _best_slice(self, qj: QueuedJob, free: Sequence[DeviceSlot]
+                    ) -> Optional[Tuple[DeviceSlot, ...]]:
+        if self.topology is None:
+            return self._first_fit(qj, free)
+        free_at = {self._node_of[d.device_id]: d for d in free
+                   if qj.fits(d) and d.device_id in self._node_of}
+        for cand in self.topology.sub_slices(qj.num_devices):
+            if all(pos in free_at for pos in cand):
+                return tuple(free_at[pos] for pos in cand)
+        return self._first_fit(qj, free)
 
 
 POLICIES: Dict[str, Type[Policy]] = {

@@ -7,10 +7,12 @@ class's captured :class:`~repro.core.hlo_ir.SimModule` through the device
 Engine (:mod:`repro.cluster.devices`), so the cluster numbers inherit the
 paper's per-op fidelity instead of trusting trace-recorded durations.
 
-Two synthetic generators cover the regimes the MLaaS literature cares about
-(Weng et al., "MLaaS in the Wild"): memoryless :func:`poisson_trace` and
+Three synthetic generators cover the regimes the MLaaS literature cares
+about (Weng et al., "MLaaS in the Wild"): memoryless :func:`poisson_trace`,
 :func:`bursty_trace` (compound arrivals — whole batches of jobs land
-together, the head-of-line-blocking stressor).  Both draw job classes from a
+together, the head-of-line-blocking stressor), and
+:func:`multislice_trace` (multi-device gang jobs over
+:data:`MULTISLICE_CLASSES`, the topology-placement stressor).  All draw job classes from a
 weighted catalog and job lengths log-uniformly, so traces are heavy-tailed:
 many short jobs, a few very long ones.  Generators split their RNG into an
 arrival stream and a job-mix stream, so sweeping the arrival *rate* at a
@@ -39,6 +41,11 @@ class JobClass:
     per-job step count (the heavy tail), ``weight`` the class's share of the
     arrival mix, and ``cost_scale`` sizes the capture-free synthetic cost
     model (:func:`repro.cluster.devices.synthetic_modules`).
+
+    ``num_devices`` is the class's gang footprint: every job of the class
+    occupies that many device slots simultaneously (a multi-device "slice"
+    job).  The topology-aware ``locality`` policy places such jobs on
+    minimal-diameter sub-slices of the fleet's interconnect graph.
     """
 
     name: str
@@ -49,6 +56,7 @@ class JobClass:
     steps_hi: int = 100
     weight: float = 1.0
     cost_scale: float = 1.0
+    num_devices: int = 1
 
 
 #: default multi-tenant mix: mostly small jobs, a medium LLM class, and a
@@ -60,6 +68,20 @@ DEFAULT_CLASSES: Tuple[JobClass, ...] = (
              steps_lo=50, steps_hi=2000, weight=0.3, cost_scale=8.0),
     JobClass("qwen3-moe-30b", "qwen3-moe-30b-a3b", seq_len=64, global_batch=4,
              steps_lo=200, steps_hi=8000, weight=0.1, cost_scale=32.0),
+)
+
+#: multi-device ("slice") mix for topology-aware placement studies: the big
+#: classes gang-occupy 2/4 devices, so the locality policy's
+#: minimal-diameter sub-slice selection actually matters
+MULTISLICE_CLASSES: Tuple[JobClass, ...] = (
+    JobClass("lenet", "lenet", seq_len=32, global_batch=8,
+             steps_lo=20, steps_hi=400, weight=0.5, cost_scale=1.0),
+    JobClass("llama3-8b-x2", "llama3-8b", seq_len=64, global_batch=4,
+             steps_lo=50, steps_hi=2000, weight=0.3, cost_scale=8.0,
+             num_devices=2),
+    JobClass("qwen3-moe-30b-x4", "qwen3-moe-30b-a3b", seq_len=64,
+             global_batch=4, steps_lo=200, steps_hi=8000, weight=0.2,
+             cost_scale=32.0, num_devices=4),
 )
 
 #: tenant pool for the multi-tenant tag (round-robin-free random draw)
@@ -75,6 +97,7 @@ class Job:
     arrival_s: float      # submission time on the cluster's virtual clock
     num_steps: int        # training steps this job runs
     user: str = "anon"    # owning tenant
+    num_devices: int = 1  # gang footprint: device slots held simultaneously
 
 
 @dataclass
@@ -130,7 +153,17 @@ class Trace:
 def _draw_jobs(n_jobs: int, classes: Sequence[JobClass], seed: int
                ) -> List[Tuple[JobClass, int, str]]:
     """The job population (class, steps, tenant) — arrival-independent, so
-    the same seed yields the same population at every arrival rate."""
+    the same seed yields the same population at every arrival rate.
+
+    Determinism contract (regression-tested in ``tests/test_cluster.py``):
+    EVERY per-job attribute — class, step count, tenant, and the class's
+    gang footprint (``num_devices``) — must derive from THIS population
+    stream, never from the generators' arrival RNG.  An attribute drawn
+    from the arrival stream would silently reshuffle the job population
+    whenever the arrival *rate* is rescaled (the arrival RNG's draw
+    sequence is rate-dependent in general), so latency-vs-load sweeps
+    would compare different workloads instead of different loads.
+    """
     rng = random.Random(seed + 1)
     weights = [c.weight for c in classes]
     out = []
@@ -152,7 +185,8 @@ def poisson_trace(n_jobs: int = 40, rate_jobs_per_s: float = 1.0,
     t, jobs = 0.0, []
     for i, (c, steps, user) in enumerate(population):
         t += rng.expovariate(rate_jobs_per_s)
-        jobs.append(Job(f"job-{i:04d}", c.name, t, steps, user))
+        jobs.append(Job(f"job-{i:04d}", c.name, t, steps, user,
+                        num_devices=c.num_devices))
     return Trace(name, jobs, tuple(classes),
                  meta={"rate_jobs_per_s": rate_jobs_per_s, "seed": seed})
 
@@ -173,15 +207,26 @@ def bursty_trace(n_jobs: int = 40, rate_jobs_per_s: float = 1.0,
         for _ in range(min(burst_size, n_jobs - i)):
             c, steps, user = population[i]
             jobs.append(Job(f"job-{i:04d}", c.name,
-                            t + rng.random() * burst_jitter_s, steps, user))
+                            t + rng.random() * burst_jitter_s, steps, user,
+                            num_devices=c.num_devices))
             i += 1
     return Trace(name, jobs, tuple(classes),
                  meta={"rate_jobs_per_s": rate_jobs_per_s, "seed": seed,
                        "burst_size": burst_size})
 
 
+def multislice_trace(n_jobs: int = 40, rate_jobs_per_s: float = 1.0,
+                     classes: Sequence[JobClass] = MULTISLICE_CLASSES,
+                     seed: int = 0, name: str = "multislice") -> Trace:
+    """Poisson arrivals over the multi-device class mix: jobs gang-occupy
+    1/2/4 device slots, the workload the topology-aware ``locality`` policy
+    (minimal-diameter sub-slice placement) is built for."""
+    return poisson_trace(n_jobs, rate_jobs_per_s, classes, seed, name)
+
+
 #: spec name -> generator for ``--trace synthetic:<name>``
-GENERATORS = {"poisson": poisson_trace, "bursty": bursty_trace}
+GENERATORS = {"poisson": poisson_trace, "bursty": bursty_trace,
+              "multislice": multislice_trace}
 
 
 def synthetic_trace(spec: str, **kw) -> Trace:

@@ -33,10 +33,12 @@ class Simulator:
     """One-stop facade over capture/engine/vision/power/correlate."""
 
     def __init__(self, hw: HardwareSpec = V5E, overlap_collectives: bool = True,
-                 num_compute_streams: int = 1, memory_model: bool = True):
+                 num_compute_streams: int = 1, memory_model: bool = True,
+                 topology_model: bool = True):
         self.hw = hw
         self.engine = Engine(hw, overlap_collectives, num_compute_streams,
-                             memory_model=memory_model)
+                             memory_model=memory_model,
+                             topology_model=topology_model)
 
     def capture(self, fn, *abstract_args, **kw) -> Captured:
         return capture(fn, *abstract_args, **kw)

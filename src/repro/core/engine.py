@@ -38,6 +38,16 @@ the paper's partition camping does), and VMEM-overflowing working sets pay
 spill traffic.  ``SimReport`` then carries ``peak_hbm_bytes``,
 ``spill_bytes`` and per-channel busy seconds, and every ``TimelineEntry``
 its channel-byte split.
+
+With ``topology_model=True`` (default) the ICI fabric gets the same
+treatment via :mod:`repro.topology`: every collective is lowered onto the
+``hw.ici_topology`` fabric into a per-link transfer schedule, and instead of
+one flat ``ici`` clock the op contends on — and claims — exactly the
+``"ici:<src>-<dst>"`` link clocks its schedule touches.  Collectives on
+disjoint links (different mesh axes / replica groups) genuinely overlap;
+shared-link collectives serialize.  ``SimReport`` carries per-link busy
+seconds (``link_busy_seconds``/``link_imbalance``) and every collective
+``TimelineEntry`` its link-byte split.
 """
 from __future__ import annotations
 
@@ -57,7 +67,10 @@ SKIP_OPS = ("parameter", "constant", "tuple", "get-tuple-element", "bitcast",
 #: schedulable resources with independent free times ("overhead" is the
 #: issue slot zero-work ops occupy; "ici" is the interconnect fabric).
 #: The single source of truth — repro.analysis conserves per-resource
-#: busy time against exactly this set.
+#: busy time against exactly this set.  Under the memory model the flat
+#: "hbm" clock splits into "hbm:<channel>" keys, and under the topology
+#: model collectives claim per-link "ici:<src>-<dst>" keys instead of the
+#: flat "ici" clock (busy-time ACCOUNTING stays on these five units).
 RESOURCES = ("mxu", "vpu", "hbm", "overhead", "ici")
 
 
@@ -87,6 +100,9 @@ class TimelineEntry:
     #: the memory model from the op's buffer placements; None on legacy runs
     channel_bytes: Optional[List[float]] = None
     spill_bytes: float = 0.0  # per-iteration VMEM-spill HBM traffic [bytes]
+    #: per-iteration ICI bytes per link ("ici:<src>-<dst>" keys) from the
+    #: topology lowering of a collective; None on non-collectives/legacy runs
+    link_bytes: Optional[Dict[str, float]] = None
 
 
 @dataclass
@@ -139,6 +155,9 @@ class SimReport:
     channel_busy_seconds: List[float] = field(default_factory=list)
     #: the allocator's full report (repro.memory.AllocationMap), or None
     memory: Optional[Any] = None
+    #: per-ICI-link transfer busy seconds ("ici:<src>-<dst>" keys) from the
+    #: topology model; empty when it is off (or no collectives ran)
+    link_busy_seconds: Dict[str, float] = field(default_factory=dict)
 
     @staticmethod
     def _ratio(num: float, den: float) -> float:
@@ -180,6 +199,19 @@ class SimReport:
         return max(self.channel_busy_seconds) / mean
 
     @property
+    def link_imbalance(self) -> float:
+        """Busiest-link busy seconds / mean (1.0 = perfectly balanced) —
+        the ICI analogue of ``channel_imbalance``: well above ~1.5 means a
+        minority of links (one camped mesh axis) gates the fabric."""
+        if not self.link_busy_seconds:
+            return 1.0
+        vals = list(self.link_busy_seconds.values())
+        mean = sum(vals) / len(vals)
+        if mean <= 0:
+            return 1.0
+        return max(vals) / mean
+
+    @property
     def launch_overhead_seconds(self) -> float:
         """Total per-op issue cost — the paper's kernel-launch-overhead tax.
 
@@ -211,6 +243,8 @@ class SimReport:
             "spill_bytes": self.spill_bytes,
             "spill_fraction": self.spill_fraction,
             "channel_imbalance": self.channel_imbalance,
+            "link_imbalance": self.link_imbalance,
+            "link_busy_total_seconds": sum(self.link_busy_seconds.values()),
             **{f"unit_{k}_seconds": v for k, v in self.unit_seconds.items()},
             **{f"exposed_{k}_seconds": v
                for k, v in self.exposed_seconds.items()},
@@ -246,7 +280,8 @@ class SimulationCache:
     def key(engine: "Engine", mod: SimModule,
             window: Optional[Tuple[int, int]]) -> tuple:
         return (id(mod), window, engine.hw, engine.overlap,
-                engine.num_compute_streams, engine.memory_model)
+                engine.num_compute_streams, engine.memory_model,
+                engine.topology_model)
 
     def lookup(self, key: tuple) -> Optional[SimReport]:
         rep = self._reports.get(key)
@@ -277,7 +312,10 @@ class Engine:
     (1 = serial TensorCore); ``memory_model=False`` falls back to the
     pre-memory-subsystem flat ``hbm`` clock (no placements, no per-channel
     contention, no VMEM spills) — the baseline the camping benchmark
-    measures dilation against.  ``cache`` (a :class:`SimulationCache`)
+    measures dilation against; ``topology_model=False`` likewise falls back
+    to the flat analytic ``ici`` clock (no per-link contention, no
+    topology-lowered collective schedules) — the pre-``repro.topology``
+    fabric.  ``cache`` (a :class:`SimulationCache`)
     memoizes whole ``simulate`` calls on identical (module, window, spec)
     inputs — the cluster simulator's per-job cost model shares one across
     the fleet.
@@ -285,7 +323,8 @@ class Engine:
 
     def __init__(self, hw: HardwareSpec = V5E, overlap_collectives: bool = True,
                  num_compute_streams: int = 1, memory_model: bool = True,
-                 cache: Optional[SimulationCache] = None):
+                 cache: Optional[SimulationCache] = None,
+                 topology_model: bool = True):
         if num_compute_streams < 1:
             raise ValueError(
                 f"num_compute_streams must be >= 1, got {num_compute_streams}")
@@ -293,7 +332,13 @@ class Engine:
         self.overlap = overlap_collectives
         self.num_compute_streams = num_compute_streams
         self.memory_model = memory_model
+        self.topology_model = topology_model
         self.cache = cache
+        # one FabricModel per engine (hw is fixed), so its collective-
+        # lowering memo survives across simulate() calls — and a malformed
+        # hw.ici_topology spec fails HERE, before any capture work
+        from repro.topology import FabricModel
+        self.fabric = FabricModel(hw) if topology_model else None
 
     # ------------------------------------------------------------------
     def simulate(self, mod: SimModule, window: Optional[Tuple[int, int]] = None
@@ -315,9 +360,11 @@ class Engine:
 
         from repro.memory import MemoryModel
         mem = MemoryModel(mod, self.hw) if self.memory_model else None
+        fabric = self.fabric
 
         timeline: List[TimelineEntry] = []
         unit_seconds: Dict[str, float] = {}
+        link_busy: Dict[str, float] = {}
         tot = {"flops": 0.0, "hbm": 0.0, "ici": 0.0, "spill": 0.0}
         unit_free: Dict[str, float] = {u: 0.0 for u in RESOURCES}
         unit_last: Dict[str, Optional[str]] = {u: None for u in RESOURCES}
@@ -358,7 +405,8 @@ class Engine:
         def schedule(node_id: str, unit: str, seconds: float, scale: float,
                      dep_t: float, dep_pred: Optional[str], use_stream: bool,
                      barrier: bool = False,
-                     channels: Optional[List[int]] = None) -> Tuple[float, float]:
+                     channels: Optional[List[int]] = None,
+                     links: Optional[List[str]] = None) -> Tuple[float, float]:
             """ASAP list-scheduling: start at max(operand-ready, unit-free
             [, stream-free]); claim the unit (and stream) until finish.
 
@@ -368,6 +416,14 @@ class Engine:
             disjoint channel subsets may overlap while an evenly striped op
             still serializes against everything.
 
+            ``links`` (topology model, ici-unit ops): the same split for the
+            fabric — the collective contends on and claims exactly the
+            per-link ``"ici:<src>-<dst>"`` clocks its lowered schedule
+            touches, so collectives on disjoint links (different mesh axes)
+            overlap while shared-link collectives serialize.  Link clocks
+            are created lazily: which links exist depends on the collectives
+            the module actually issues.
+
             ``barrier=True`` (non-overlapped collectives): wait for EVERY
             stream and hold them all until finish — with multiple streams a
             collective must not run beside compute on another stream, or
@@ -376,6 +432,9 @@ class Engine:
             if channels:
                 cands += [(unit_free[f"hbm:{c}"], unit_last[f"hbm:{c}"])
                           for c in channels]
+            elif links:
+                cands += [(unit_free.setdefault(l, 0.0),
+                           unit_last.setdefault(l, None)) for l in links]
             else:
                 cands.append((unit_free[unit], unit_last[unit]))
             si = None
@@ -391,6 +450,10 @@ class Engine:
                 for c in channels:
                     unit_free[f"hbm:{c}"] = finish
                     unit_last[f"hbm:{c}"] = node_id
+            elif links:
+                for l in links:
+                    unit_free[l] = finish
+                    unit_last[l] = node_id
             else:
                 unit_free[unit] = finish
                 unit_last[unit] = node_id
@@ -443,7 +506,7 @@ class Engine:
                         last = max(last, ready[key], key=lambda r: r[0])
                         continue
                 state["idx"] += 1
-                ot = op_time(mod, comp, op, self.hw)
+                ot = op_time(mod, comp, op, self.hw, fabric=fabric)
                 mo = mem.time_op(inv, comp, op, ot) if mem is not None \
                     else None
                 chans = None
@@ -451,6 +514,8 @@ class Engine:
                     ot = mo.ot
                     if ot.unit == "hbm":
                         chans = mo.channels
+                links = sorted(ot.link_seconds) if ot.unit == "ici" \
+                    and ot.link_seconds else None
                 d, dpred = dep_ready(comp_name, op, t_base, base_pred)
                 node_id = f"{inv}:{comp_name}/{op.name}"
                 on_ici = ot.unit == "ici"
@@ -458,7 +523,7 @@ class Engine:
                 barrier = on_ici and not self.overlap
                 start, _ = schedule(node_id, ot.unit, ot.seconds, scale,
                                     d, dpred, use_stream, barrier,
-                                    channels=chans)
+                                    channels=chans, links=links)
                 if window and not (window[0] <= state["idx"] < window[1]):
                     # fast-forward: same clocks advanced, no timeline entry
                     state["ff_overhead"] += ot.overhead_s * scale
@@ -469,8 +534,9 @@ class Engine:
                         ot.flops, ot.hbm_bytes, ot.ici_bytes, comp_name,
                         overhead_s=ot.overhead_s,
                         channel_bytes=mo.channel_bytes if mo else None,
-                        spill_bytes=float(mo.spill_bytes) if mo else 0.0))
-                self._account(ot, scale, tot, unit_seconds)
+                        spill_bytes=float(mo.spill_bytes) if mo else 0.0,
+                        link_bytes=ot.link_bytes))
+                self._account(ot, scale, tot, unit_seconds, link_busy)
                 if mo is not None:
                     mem.account(mo, scale)
                     tot["spill"] += mo.spill_bytes * scale
@@ -512,15 +578,17 @@ class Engine:
             t1, rpred = run_comp(b.group(1), scale * trip, t0, pred0)
             # iterations serialize on the loop-carried dependence, so the
             # body's resources stay busy for the remaining trips
+            # .get(..., 0.0): link clocks are created lazily, so a collective
+            # first issued INSIDE the body has no snapshot entry
             t1_res = max([t1]
                          + [t for u, t in unit_free.items()
-                            if t > snap_units[u]]
+                            if t > snap_units.get(u, 0.0)]
                          + [t for i, t in enumerate(streams)
                             if t > snap_streams[i]])
             iter_time = max(t1_res - t0, 0.0)
             extra = iter_time * (trip - 1)
             for u in unit_free:
-                if unit_free[u] > snap_units[u]:
+                if unit_free[u] > snap_units.get(u, 0.0):
                     unit_free[u] += extra
             for i in range(len(streams)):
                 if streams[i] > snap_streams[i]:
@@ -559,6 +627,7 @@ class Engine:
             spill_bytes=tot["spill"],
             channel_busy_seconds=list(mem.channel_busy) if mem else [],
             memory=memmap,
+            link_busy_seconds=link_busy,
         )
         if self.cache is not None:
             self.cache.store(cache_key, mod, report)
@@ -634,8 +703,12 @@ class Engine:
 
     @staticmethod
     def _account(ot: OpTime, scale: float, tot: Dict[str, float],
-                 unit_seconds: Dict[str, float]):
+                 unit_seconds: Dict[str, float],
+                 link_busy: Optional[Dict[str, float]] = None):
         tot["flops"] += ot.flops * scale
         tot["hbm"] += ot.hbm_bytes * scale
         tot["ici"] += ot.ici_bytes * scale
         unit_seconds[ot.unit] = unit_seconds.get(ot.unit, 0.0) + ot.seconds * scale
+        if link_busy is not None and ot.link_seconds:
+            for l, s in ot.link_seconds.items():
+                link_busy[l] = link_busy.get(l, 0.0) + s * scale

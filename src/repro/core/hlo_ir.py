@@ -163,6 +163,8 @@ _CONST_INT_RE = re.compile(r"constant\((\d+)\)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _LHS_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
 _SOURCE_TARGET_RE = re.compile(r"source_target_pairs=\{")
+_ST_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
+_ST_PAIR_RE = re.compile(r"\{(\d+),(\d+)\}")
 
 
 def _split_operands(argstr: str) -> Tuple[List[str], str]:
@@ -300,15 +302,34 @@ class SimModule:
         if op.opcode not in COLLECTIVE_OPS:
             return None
         group = 1
+        members: Optional[Tuple[int, ...]] = None
         m = _RG_IOTA_RE.search(op.raw)
         if m:
             group = int(m.group(2))
         else:
             m2 = _RG_LIST_RE.search(op.raw)
             if m2:
+                # the FIRST replica group's device ids: which physical links
+                # the collective lands on (repro.topology).  Every group is
+                # assumed congruent — true of SPMD-partitioned HLO.
+                try:
+                    members = tuple(int(d) for d in m2.group(1).split(","))
+                except ValueError:
+                    members = None
                 group = len(m2.group(1).split(","))
+        pairs: Optional[Tuple[Tuple[int, int], ...]] = None
         if op.opcode == "collective-permute":
-            group = 2   # point-to-point
+            group = 2   # point-to-point per pair
+            mp = _ST_PAIRS_RE.search(op.raw)
+            if mp:
+                # EVERY source->target pair: the fabric carries them all
+                # concurrently, so the topology model must claim every
+                # pair's links, not just the first's
+                pairs = tuple((int(a), int(b)) for a, b in
+                              _ST_PAIR_RE.findall(mp.group(1)))
+                devices = sorted({d for p in pairs for d in p})
+                members = tuple(devices)
+                group = max(len(devices), 2)
         # payload: bytes that must traverse links (per device)
         payload = op.out_bytes
         if op.opcode == "all-gather":
@@ -318,7 +339,8 @@ class SimModule:
         elif op.opcode == "reduce-scatter":
             payload = sum(s.bytes for s in
                           (op.outputs or []))  # input traverses once
-        return {"kind": op.opcode, "group": group, "payload": payload}
+        return {"kind": op.opcode, "group": group, "payload": payload,
+                "members": members, "pairs": pairs}
 
     # -- module-level summaries -------------------------------------------------
     def walk_entry(self):

@@ -35,6 +35,12 @@ class HardwareSpec:
     ici_links_per_axis: int = 2           # bidirectional torus ring per axis
     ici_latency_s: float = 1e-6           # per-hop launch latency
     dcn_bw: float = 12.5e9                # inter-pod (DCN) per host share
+    #: fabric shape for repro.topology ("ring" | "ring:N" | "torus:AxB[xC]"
+    #: | "fc[:N]").  The unsized default builds a per-collective-group ring,
+    #: which reproduces the flat analytic model's totals exactly; a sized
+    #: spec pins collectives onto one shared fabric so different replica
+    #: groups contend for (or provably avoid) the same physical links.
+    ici_topology: str = "ring"
 
     # --- overheads ---
     op_launch_overhead_s: float = 0.5e-6  # per-HLO-op issue cost

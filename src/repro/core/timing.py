@@ -31,6 +31,10 @@ class OpTime:
     ici_bytes: float = 0.0
     detail: str = ""
     overhead_s: float = 0.0  # issue-cost portion of ``seconds`` (XLA dispatch)
+    #: per-link busy seconds / bytes of a topology-lowered collective
+    #: (keys = "ici:<src>-<dst>"); None on non-collectives and the flat path
+    link_seconds: Optional[Dict[str, float]] = None
+    link_bytes: Optional[Dict[str, float]] = None
 
 
 def _dot_dims(mod: SimModule, comp: Computation, op: SimOp):
@@ -49,7 +53,10 @@ def _dot_dims(mod: SimModule, comp: Computation, op: SimOp):
 
 
 def op_time(mod: SimModule, comp: Computation, op: SimOp,
-            hw: HardwareSpec) -> OpTime:
+            hw: HardwareSpec, fabric=None) -> OpTime:
+    """``fabric`` (a :class:`repro.topology.FabricModel`) switches collective
+    timing from the flat analytic path to per-link topology lowering — the
+    engine passes its fabric when ``topology_model`` is on."""
     oc = op.opcode
     flops = mod.op_flops(comp, op)
     hbm = mod.op_hbm_bytes(comp, op)
@@ -57,10 +64,17 @@ def op_time(mod: SimModule, comp: Computation, op: SimOp,
     if ci:
         from repro.core.collectives import collective_time
         ct = collective_time(ci["kind"], ci["payload"], ci["group"], hw,
-                             inter_pod=ci["group"] > 256)
+                             inter_pod=ci["group"] > 256, fabric=fabric,
+                             members=ci.get("members"),
+                             pairs=ci.get("pairs"))
+        sched = ct.schedule
         return OpTime(ct.seconds + hw.op_launch_overhead_s, "ici",
-                      0.0, hbm, ct.link_bytes, detail=f"g={ci['group']}",
-                      overhead_s=hw.op_launch_overhead_s)
+                      0.0, hbm, ct.link_bytes,
+                      detail=f"g={ci['group']}" + (
+                          f" alg={sched.algorithm}" if sched else ""),
+                      overhead_s=hw.op_launch_overhead_s,
+                      link_seconds=dict(sched.link_seconds) if sched else None,
+                      link_bytes=dict(sched.link_bytes) if sched else None)
 
     dtype = op.outputs[0].dtype if op.outputs else "f32"
     mxu_peak = hw.peak_bf16_flops if dtype in ("bf16", "f16") else hw.peak_f32_flops

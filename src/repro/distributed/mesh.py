@@ -50,6 +50,24 @@ def build_mesh(cfg: MeshConfig, devices: Optional[Sequence] = None,
     return Mesh(dev_array, cfg.axis_names)
 
 
+def fabric_spec(cfg: MeshConfig) -> str:
+    """The :mod:`repro.topology` fabric spec a mesh maps onto.
+
+    TPU meshes are laid out on the physical torus axis-by-axis, so a mesh
+    with two-plus non-trivial axes simulates as a torus of those axis sizes,
+    a single non-trivial axis as a ring, and a trivial (1-device) mesh as a
+    1-ring.  Feed the result into ``HardwareSpec.ici_topology`` (or
+    ``Fleet.from_spec(..., topology=...)``) so simulated collectives land on
+    the links the mesh would actually use::
+
+        hw = dataclasses.replace(V5E, ici_topology=fabric_spec(cfg))
+    """
+    dims = [d for d in cfg.shape if d > 1]
+    if len(dims) >= 2:
+        return "torus:" + "x".join(str(d) for d in dims)
+    return f"ring:{dims[0] if dims else 1}"
+
+
 def shrink_to(cfg: MeshConfig, num_devices: int) -> MeshConfig:
     """Elastic shrink: keep the model axis, shrink data (and drop pod) axes."""
     model = cfg.axis_size("model")

@@ -1,0 +1,330 @@
+"""Collective-algorithm lowering: (kind, payload, members) -> link schedule.
+
+Every collective the engine times is lowered here into a sequence of
+*phases*: in one phase a set of directed links each carry some bytes
+concurrently, and the phase takes ``max(bytes/link_bw) + hops * latency``
+(transfers pipeline over multi-hop routes, paying per-hop latency).  The
+resulting :class:`TransferSchedule` carries the total ``seconds`` plus
+per-link busy seconds and bytes — the engine claims exactly those link
+clocks, so collectives on disjoint links overlap while shared-link
+collectives serialize.
+
+Algorithms:
+
+* ``ring``        — unidirectional ring over the member order.  All-reduce
+  is reduce-scatter + all-gather: ``2*(g-1)`` phases of ``S/g`` chunks, so
+  the total is the textbook ``2*(g-1)/g * S / link_bw + 2*(g-1) * latency``
+  (and one-pass collectives — all-gather, reduce-scatter, all-to-all
+  rotation, broadcast — take ``(g-1)/g * S / link_bw + (g-1) * latency``).
+  On the default unsized-ring fabric this reproduces the flat analytic
+  model in :func:`repro.core.collectives.collective_time` exactly.
+* ``bidir-ring``  — both ring directions carry half the payload
+  concurrently: half the transfer time, same latency phase count.
+* ``halving``     — recursive halving/doubling (power-of-two groups):
+  the same ``2*(g-1)/g * S`` total bytes in ``2*log2(g)`` phases — the
+  latency-optimal tree for small payloads.
+* ``torus``       — multi-axis ring all-reduce (reduce-scatter along each
+  axis, all-gather back in reverse): bandwidth cost
+  ``2*(N-1)/N * S / link_bw`` (the same optimal total as one big ring) but
+  only ``2 * sum(axis_size - 1)`` latency hops instead of ``2*(N-1)`` —
+  how an actual TPU torus beats a flat ring.
+* ``direct``      — point-to-point (collective-permute): the payload
+  traverses the route once.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.hw import HardwareSpec
+from repro.topology.graph import Topology, link_name
+
+ALGORITHMS = ("ring", "bidir-ring", "halving", "torus", "direct")
+
+
+@dataclass
+class TransferSchedule:
+    """A lowered collective: per-link transfer plan + its makespan."""
+
+    kind: str                     # HLO collective kind
+    algorithm: str                # which lowering produced it
+    group: int                    # participating device count
+    payload_bytes: float
+    seconds: float = 0.0          # schedule makespan (no launch overhead)
+    hops: int = 0                 # latency-paying pipeline steps
+    link_seconds: Dict[str, float] = field(default_factory=dict)
+    link_bytes: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def links(self) -> List[str]:
+        return sorted(self.link_bytes)
+
+    @property
+    def traffic_bytes(self) -> float:
+        """Per-device ICI traffic (the flat model's ``link_bytes``).
+
+        Ring/torus schedules model EVERY member's sends, so the per-device
+        share is the link total over the group; a ``direct`` schedule
+        (collective-permute) models only the simulated device's own route,
+        which IS its per-device traffic.
+        """
+        if self.group <= 0:
+            return 0.0
+        if self.algorithm == "direct":
+            return float(self.payload_bytes)
+        return sum(self.link_bytes.values()) / self.group
+
+    @property
+    def link_imbalance(self) -> float:
+        """Busiest link bytes / mean (1.0 = perfectly balanced)."""
+        if not self.link_bytes:
+            return 1.0
+        mean = sum(self.link_bytes.values()) / len(self.link_bytes)
+        if mean <= 0:
+            return 1.0
+        return max(self.link_bytes.values()) / mean
+
+
+class _Builder:
+    """Accumulates phases into a :class:`TransferSchedule`."""
+
+    def __init__(self, kind: str, algorithm: str, group: int,
+                 payload: float, bw: float, lat: float):
+        self.sched = TransferSchedule(kind, algorithm, group, payload)
+        self.bw = max(bw, 1e-30)
+        self.lat = lat
+
+    def phase(self, transfers: Dict[Tuple[int, int], float],
+              pipeline_hops: int = 1, repeat: int = 1) -> None:
+        """One synchronous step: every link in ``transfers`` moves its bytes
+        concurrently; chunks pipeline over ``pipeline_hops`` store-and-forward
+        stages.  ``repeat`` collapses identical consecutive phases."""
+        if not transfers or repeat <= 0:
+            return
+        s = self.sched
+        step = max(b for b in transfers.values()) / self.bw \
+            + pipeline_hops * self.lat
+        s.seconds += step * repeat
+        s.hops += pipeline_hops * repeat
+        for (a, b), nbytes in transfers.items():
+            key = link_name(a, b)
+            s.link_bytes[key] = s.link_bytes.get(key, 0.0) + nbytes * repeat
+            s.link_seconds[key] = (s.link_seconds.get(key, 0.0)
+                                   + (nbytes / self.bw + self.lat) * repeat)
+
+
+# ---------------------------------------------------------------------------
+# member geometry helpers
+# ---------------------------------------------------------------------------
+
+def _ring_hop_routes(topo: Topology, order: Sequence[int]
+                     ) -> List[List[Tuple[int, int]]]:
+    """Directed link route for each consecutive (wrapped) pair of ``order``."""
+    g = len(order)
+    return [topo.route(order[i], order[(i + 1) % g]) for i in range(g)]
+
+
+def _ring_transfers(routes: Sequence[List[Tuple[int, int]]], chunk: float
+                    ) -> Tuple[Dict[Tuple[int, int], float], int]:
+    transfers: Dict[Tuple[int, int], float] = {}
+    for route in routes:
+        for hop in route:
+            transfers[hop] = transfers.get(hop, 0.0) + chunk
+    return transfers, max((len(r) for r in routes), default=1)
+
+
+def _block_axes(topo: Topology, positions: Sequence[int]
+                ) -> Optional[List[List[List[int]]]]:
+    """If ``positions`` form an axis-aligned block of a torus, return per-axis
+    rings: ``rings[ax]`` is a list of position-chains, each one ring along
+    axis ``ax`` (only axes where the block spans > 1 value).  ``None`` when
+    the members are not a block (fall back to one big ring)."""
+    if topo.kind != "torus":
+        return None
+    coords = [topo.coords(p) for p in positions]
+    values = [sorted({c[ax] for c in coords}) for ax in range(len(topo.dims))]
+    size = 1
+    for v in values:
+        size *= len(v)
+    if size != len(positions) or size != len(set(positions)):
+        return None
+    have = set(coords)
+    for combo in itertools.product(*values):
+        if combo not in have:
+            return None
+    pos_at = {c: p for c, p in zip(coords, positions)}
+    rings: List[List[List[int]]] = []
+    for ax in range(len(topo.dims)):
+        if len(values[ax]) <= 1:
+            rings.append([])
+            continue
+        other = [values[a] for a in range(len(topo.dims)) if a != ax]
+        chains = []
+        for fixed in itertools.product(*other):
+            chain = []
+            for v in values[ax]:
+                c = list(fixed)
+                c.insert(ax, v)
+                chain.append(pos_at[tuple(c)])
+            chains.append(chain)
+        rings.append(chains)
+    return rings
+
+
+def _snake_order(topo: Topology, positions: Sequence[int]) -> List[int]:
+    """Order a torus block boustrophedon (snake) so consecutive members are
+    adjacent; non-block member sets fall back to sorted position order."""
+    if _block_axes(topo, positions) is None:
+        return sorted(positions)
+    coords = sorted(topo.coords(p) for p in positions)
+    ordered, flip = [], False
+    by_prefix: Dict[Tuple[int, ...], List[Tuple[int, ...]]] = {}
+    for c in coords:
+        by_prefix.setdefault(c[:-1], []).append(c)
+    for prefix in sorted(by_prefix):
+        row = sorted(by_prefix[prefix], reverse=flip)
+        ordered.extend(row)
+        flip = not flip
+    return [topo.pos_of(c) for c in ordered]
+
+
+# ---------------------------------------------------------------------------
+# the lowering entry point
+# ---------------------------------------------------------------------------
+
+def lower_collective(kind: str, payload_bytes: float,
+                     members: Sequence[int], topo: Topology,
+                     hw: HardwareSpec,
+                     algorithm: Optional[str] = None,
+                     pairs: Optional[Sequence[Tuple[int, int]]] = None
+                     ) -> TransferSchedule:
+    """Lower one collective over ``members`` (global device ids) on ``topo``.
+
+    ``algorithm=None`` picks the natural default: ``direct`` for permutes,
+    ``torus`` for all-reduce when the members form a multi-axis block of a
+    torus fabric, ``ring`` otherwise.  ``pairs`` (permutes) lists every
+    source->target pair — all of them transfer concurrently, so the
+    schedule claims every pair's route, not just the first's.
+    """
+    g = len(members)
+    bw = hw.dcn_bw if topo.kind == "fc" \
+        else hw.ici_links_per_axis * hw.ici_link_bw
+    lat = hw.ici_latency_s
+    if algorithm is not None and algorithm not in ALGORITHMS:
+        raise KeyError(f"unknown collective algorithm {algorithm!r}; "
+                       f"known: {ALGORITHMS}")
+    if g <= 1:
+        return TransferSchedule(kind, algorithm or "ring", g, payload_bytes)
+
+    pos_by_id = {dev: pos for pos, dev in enumerate(topo.ids)}
+    positions = [pos_by_id[m] for m in members]
+    rings = _block_axes(topo, positions)
+    multi_axis = rings is not None and sum(1 for r in rings if r) >= 2
+
+    if algorithm is None:
+        if kind == "collective-permute":
+            algorithm = "direct"
+        elif kind == "all-reduce" and multi_axis:
+            algorithm = "torus"
+        else:
+            algorithm = "ring"
+    if algorithm == "torus" and not multi_axis:
+        algorithm = "ring"
+    if algorithm == "halving" and (g & (g - 1)) != 0:
+        algorithm = "ring"          # recursive halving needs a power of two
+
+    b = _Builder(kind, algorithm, g, payload_bytes, bw, lat)
+    S = float(payload_bytes)
+
+    if algorithm == "direct":
+        # one concurrent phase carrying EVERY source->target pair; per-pair
+        # payload is the per-device send, so disjoint pairs keep the flat
+        # time (S/bw + lat) while pairs routed over shared links dilate
+        plist = [(pos_by_id[a], pos_by_id[b]) for a, b in pairs
+                 if a in pos_by_id and b in pos_by_id and a != b] \
+            if pairs else [(positions[0], positions[1 % g])]
+        transfers: Dict[Tuple[int, int], float] = {}
+        ph = 1
+        for pa, pb in plist:
+            route = topo.route(pa, pb)
+            ph = max(ph, len(route))
+            for hop in route:
+                transfers[hop] = transfers.get(hop, 0.0) + S
+        b.phase(transfers, pipeline_hops=ph)
+        return b.sched
+
+    if algorithm == "torus":
+        axes = [ax for ax, chains in enumerate(rings) if chains]
+        shard = S
+        for ax in axes:                       # reduce-scatter sweep
+            m = len(rings[ax][0])
+            _axis_ring_phases(b, topo, rings[ax], shard / m, m - 1)
+            shard /= m
+        for ax in reversed(axes):             # all-gather sweep back
+            m = len(rings[ax][0])
+            _axis_ring_phases(b, topo, rings[ax], shard, m - 1, reverse=True)
+            shard *= m
+        return b.sched
+
+    order = _snake_order(topo, positions)
+    routes = _ring_hop_routes(topo, order)
+
+    # phase count by KIND (same on every ring-family algorithm): all-reduce
+    # is a reduce-scatter sweep PLUS an all-gather sweep; everything else is
+    # one traversal (AG / RS / A2A rotation / broadcast)
+    two_sweeps = kind == "all-reduce"
+
+    if algorithm == "bidir-ring":
+        fwd, fh = _ring_transfers(routes, S / (2 * g))
+        rev_routes = _ring_hop_routes(topo, list(reversed(order)))
+        rev, rh = _ring_transfers(rev_routes, S / (2 * g))
+        both = dict(fwd)
+        for hop, v in rev.items():
+            both[hop] = both.get(hop, 0.0) + v
+        b.phase(both, pipeline_hops=max(fh, rh),
+                repeat=(2 if two_sweeps else 1) * (g - 1))
+        return b.sched
+
+    if algorithm == "halving":
+        # recursive halving (the "rs" sweep) / doubling (the "ag" sweep):
+        # all-reduce runs both, one-pass collectives run only theirs
+        stages = g.bit_length() - 1
+        sweeps = ("rs", "ag") if two_sweeps \
+            else (("rs",) if kind == "reduce-scatter" else ("ag",))
+        for direction in sweeps:
+            srange = range(stages) if direction == "rs" \
+                else range(stages - 1, -1, -1)
+            for s in srange:
+                chunk = S / (2 ** (s + 1))
+                transfers: Dict[Tuple[int, int], float] = {}
+                ph = 1
+                for i in range(g):
+                    route = topo.route(order[i], order[i ^ (1 << s)])
+                    ph = max(ph, len(route))
+                    for hop in route:
+                        transfers[hop] = transfers.get(hop, 0.0) + chunk
+                b.phase(transfers, pipeline_hops=ph)
+        return b.sched
+
+    # plain unidirectional ring
+    transfers, ph = _ring_transfers(routes, S / g)
+    b.phase(transfers, pipeline_hops=ph,
+            repeat=(2 if two_sweeps else 1) * (g - 1))
+    return b.sched
+
+
+def _axis_ring_phases(b: _Builder, topo: Topology,
+                      chains: Sequence[Sequence[int]], chunk: float,
+                      nphases: int, reverse: bool = False) -> None:
+    """One axis sweep of the torus algorithm: every chain (a ring along this
+    axis) moves ``chunk`` around simultaneously for ``nphases`` steps."""
+    transfers: Dict[Tuple[int, int], float] = {}
+    ph = 1
+    for chain in chains:
+        order = list(reversed(chain)) if reverse else list(chain)
+        for route in _ring_hop_routes(topo, order):
+            ph = max(ph, len(route))
+            for hop in route:
+                transfers[hop] = transfers.get(hop, 0.0) + chunk
+    b.phase(transfers, pipeline_hops=ph, repeat=nphases)

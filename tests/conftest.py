@@ -5,6 +5,20 @@ import jax.numpy as jnp
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="rewrite tests/golden/*.json snapshots from the current "
+             "engine instead of diffing against them (review the diff "
+             "before committing — the snapshots ARE the known-good numbers)")
+
+
+@pytest.fixture
+def update_golden(request):
+    """True when the run should rewrite golden snapshots."""
+    return request.config.getoption("--update-golden")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.key(0)

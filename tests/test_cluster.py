@@ -350,3 +350,53 @@ def test_generators_deterministic_and_rate_scalable():
     with pytest.raises(KeyError):
         from repro.cluster import synthetic_trace
         synthetic_trace("synthetic:nope")
+
+
+# ---------------------------------------------------------------------------
+# workload determinism: byte-identical round-trip, rate-rescale invariance
+# ---------------------------------------------------------------------------
+
+def test_trace_json_roundtrip_byte_identical(tmp_path):
+    """save -> load -> save must be byte-identical (a trace file is a
+    reproducible experiment input, not an approximation of one)."""
+    from repro.cluster import multislice_trace, poisson_trace
+    for gen in (poisson_trace, bursty_trace, multislice_trace):
+        tr = gen(n_jobs=25, rate_jobs_per_s=1.5, seed=3)
+        p1 = tmp_path / f"{tr.name}_a.json"
+        p2 = tmp_path / f"{tr.name}_b.json"
+        tr.save(str(p1))
+        Trace.load(str(p1)).save(str(p2))
+        assert p1.read_bytes() == p2.read_bytes()
+        # and generating twice from the same seed is byte-identical too
+        assert tr.to_json() == gen(n_jobs=25, rate_jobs_per_s=1.5,
+                                   seed=3).to_json()
+
+
+def test_population_invariant_under_rate_rescaling():
+    """Same seed at ANY arrival rate => the identical job population —
+    including the num_devices gang footprint, which must derive from the
+    population stream (the class), never from the arrival RNG.  Compared by
+    job_id: jitter may reorder the arrival-sorted view across rates."""
+    from repro.cluster import multislice_trace, poisson_trace
+
+    def population(trace):
+        return sorted((j.job_id, j.job_class, j.num_steps, j.user,
+                       j.num_devices) for j in trace.jobs)
+
+    for gen in (poisson_trace, bursty_trace, multislice_trace):
+        pops = [population(gen(n_jobs=30, rate_jobs_per_s=r, seed=7))
+                for r in (0.25, 1.0, 16.0)]
+        assert pops[0] == pops[1] == pops[2]
+    # multislice actually exercises multi-device footprints
+    tr = multislice_trace(n_jobs=30, seed=7)
+    assert {j.num_devices for j in tr.jobs} >= {1, 2}
+
+
+def test_job_num_devices_survives_json_roundtrip():
+    from repro.cluster import multislice_trace
+    tr = multislice_trace(n_jobs=12, seed=5)
+    back = Trace.from_json(tr.to_json())
+    assert [j.num_devices for j in back.jobs] == \
+           [j.num_devices for j in tr.jobs]
+    assert {c.name: c.num_devices for c in back.classes} == \
+           {c.name: c.num_devices for c in tr.classes}

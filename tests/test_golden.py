@@ -1,0 +1,68 @@
+"""Golden-snapshot regression tests for ``SimReport.summary()``.
+
+The engine is a deterministic analytic model, so its summary numbers for a
+fixed captured workload are exact reproducible artifacts.  These tests pin
+them: ``tests/golden/<name>.json`` holds the known-good ``summary()`` of
+the lenet and transformer (llama3-8b smoke) train-step captures, and any
+future engine refactor diffs against those numbers instead of silently
+drifting.  After an INTENDED model change, regenerate with::
+
+    PYTHONPATH=src python -m pytest tests/test_golden.py --update-golden
+
+and review the JSON diff — the diff is the review artifact.
+
+Values compare at rel 1e-6 (exact up to float formatting); structural keys
+must match exactly, so adding/removing a summary field also shows up here.
+"""
+import json
+import pathlib
+
+import pytest
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+#: (snapshot name, registered arch, seq_len, global_batch)
+WORKLOADS = [
+    ("lenet", "lenet", 32, 8),
+    ("transformer", "llama3-8b", 64, 4),
+]
+
+
+def _capture_summary(arch: str, seq_len: int, global_batch: int) -> dict:
+    from repro import config as C
+    from repro.core import Simulator
+    from repro.runtime.steps import train_bundle
+
+    entry = C.get(arch)
+    shape = C.ShapeConfig("golden", seq_len=seq_len,
+                          global_batch=global_batch, kind="train")
+    rc = C.RunConfig(model=entry.smoke, shape=shape, mesh=C.SMOKE_MESH)
+    sim = Simulator()
+    cap = sim.capture_bundle(train_bundle(rc), name=f"{arch}_golden")
+    return sim.performance(cap).summary()
+
+
+@pytest.mark.parametrize("name,arch,seq_len,batch", WORKLOADS,
+                         ids=[w[0] for w in WORKLOADS])
+def test_summary_matches_golden(name, arch, seq_len, batch, update_golden):
+    got = _capture_summary(arch, seq_len, batch)
+    path = GOLDEN_DIR / f"{name}.json"
+    if update_golden:
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps(got, indent=2, sort_keys=True) + "\n")
+    assert path.exists(), (
+        f"no golden snapshot at {path}; create it with "
+        f"pytest tests/test_golden.py --update-golden")
+    want = json.loads(path.read_text())
+    assert set(got) == set(want), (
+        f"summary() keys changed: +{sorted(set(got) - set(want))} "
+        f"-{sorted(set(want) - set(got))} — regenerate goldens if intended")
+    drift = {}
+    for key, expect in want.items():
+        value = got[key]
+        if value != pytest.approx(expect, rel=1e-6, abs=1e-18):
+            drift[key] = (expect, value)
+    assert not drift, (
+        f"{name}: summary drifted from golden (expected, got): {drift} — "
+        f"if this change is intended, rerun with --update-golden and "
+        f"review the JSON diff")

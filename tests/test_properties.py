@@ -1,0 +1,129 @@
+"""Engine metamorphic invariants over RANDOM small HLO modules (hypothesis).
+
+Generalizes the PR 2 hand-built reconcile test to property form:
+
+* **bandwidth monotonicity** — scaling any single HardwareSpec
+  bandwidth/throughput knob UP never makes the makespan longer (with one
+  compute stream the ASAP list schedule is a monotone max/plus composition
+  of op durations, so no Graham anomaly can appear);
+* **link-busy conservation** — the per-link fabric clocks can only spread
+  the flat ICI busy time across links, never lose it:
+  ``sum(link_busy_seconds) >= flat ici transfer seconds``;
+* **window fast-forward totals** — a ``window=`` run pays for everything it
+  skips analytically, so EVERY accounted total (per-unit busy, flops,
+  bytes, launch overhead, per-link busy — and the makespan itself) equals
+  the full run's.
+
+Hypothesis is a CI-only dependency (not shipped in the runtime image), so
+the whole module importorskips.
+"""
+import dataclasses
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import Engine, V5E, parse_hlo_module  # noqa: E402
+from repro.topology import ici_transfer_seconds  # noqa: E402
+
+_ADDC = """
+%addc (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+"""
+
+#: op templates: name -> line builder (prev = previous value's name)
+_OPS = {
+    "add": lambda i, prev, d, g: (
+        f"  %v{i} = f32[{d},{d}]{{1,0}} add(%{prev}, %{prev})"),
+    "exp": lambda i, prev, d, g: (
+        f"  %v{i} = f32[{d},{d}]{{1,0}} exponential(%{prev})"),
+    "dot": lambda i, prev, d, g: (
+        f"  %v{i} = f32[{d},{d}]{{1,0}} dot(%{prev}, %{prev}), "
+        f"lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}"),
+    "gather": lambda i, prev, d, g: (
+        f"  %v{i} = f32[{d},{d}]{{1,0}} gather(%p0, %{prev}), "
+        f"offset_dims={{}}"),
+    "all-reduce": lambda i, prev, d, g: (
+        f"  %v{i} = f32[{d},{d}]{{1,0}} all-reduce(%{prev}), "
+        f"replica_groups={{{{{','.join(str(x) for x in range(g))}}}}}, "
+        f"to_apply=%addc"),
+    "all-gather": lambda i, prev, d, g: (
+        f"  %v{i} = f32[{d},{d}]{{1,0}} all-gather(%{prev}), "
+        f"replica_groups={{{{{','.join(str(x) for x in range(g))}}}}}, "
+        f"dimensions={{0}}"),
+}
+
+
+def build_module(op_kinds, dim, group):
+    """A serial chain of ops over f32[dim,dim] values."""
+    lines = [f"ENTRY %main (p0: f32[{dim},{dim}]) -> f32[{dim},{dim}] {{",
+             f"  %p0 = f32[{dim},{dim}]{{1,0}} parameter(0)"]
+    prev = "p0"
+    for i, kind in enumerate(op_kinds):
+        lines.append(_OPS[kind](i, prev, dim, group))
+        prev = f"v{i}"
+    lines.append(f"  ROOT %out = f32[{dim},{dim}]{{1,0}} add(%{prev}, %{prev})")
+    lines.append("}")
+    return parse_hlo_module(_ADDC + "\n".join(lines))
+
+
+modules = st.builds(
+    build_module,
+    st.lists(st.sampled_from(sorted(_OPS)), min_size=1, max_size=6),
+    st.sampled_from([64, 192, 512]),
+    st.sampled_from([2, 4, 8]),
+)
+
+#: spec knobs where "more" must never slow the simulated workload
+_BW_FIELDS = ("hbm_bw", "ici_link_bw", "vpu_flops", "peak_f32_flops",
+              "transcendental_flops", "vmem_bw")
+
+
+@settings(max_examples=25, deadline=None)
+@given(mod=modules, field=st.sampled_from(_BW_FIELDS),
+       factor=st.sampled_from([1.5, 4.0, 32.0]))
+def test_makespan_monotone_in_each_bandwidth(mod, field, factor):
+    base = Engine(V5E).simulate(mod)
+    faster_hw = dataclasses.replace(V5E,
+                                    **{field: getattr(V5E, field) * factor})
+    faster = Engine(faster_hw).simulate(mod)
+    assert faster.total_seconds <= base.total_seconds * (1 + 1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(mod=modules)
+def test_link_busy_conserves_flat_ici_busy(mod):
+    rep = Engine(V5E).simulate(mod)
+    flat_busy = ici_transfer_seconds(rep)
+    if flat_busy == 0:
+        assert not rep.link_busy_seconds
+        return
+    assert sum(rep.link_busy_seconds.values()) >= flat_busy - 1e-12
+    # and the flat-fabric engine agrees on the aggregate ici busy time
+    flat_rep = Engine(V5E, topology_model=False).simulate(mod)
+    assert rep.unit_seconds.get("ici", 0.0) == \
+        pytest.approx(flat_rep.unit_seconds.get("ici", 0.0), rel=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(mod=modules, w0=st.integers(0, 4), span=st.integers(0, 8))
+def test_window_fast_forward_equals_full_totals(mod, w0, span):
+    full = Engine(V5E).simulate(mod)
+    win = Engine(V5E).simulate(mod, window=(w0, w0 + span))
+    assert win.total_seconds == pytest.approx(full.total_seconds, rel=1e-9)
+    assert win.total_flops == pytest.approx(full.total_flops, rel=1e-9)
+    assert win.total_hbm_bytes == pytest.approx(full.total_hbm_bytes,
+                                                rel=1e-9)
+    assert win.total_ici_bytes == pytest.approx(full.total_ici_bytes,
+                                                rel=1e-9)
+    assert win.launch_overhead_seconds == pytest.approx(
+        full.launch_overhead_seconds, rel=1e-9)
+    for u, v in full.unit_seconds.items():
+        assert win.unit_seconds.get(u, 0.0) == pytest.approx(v, rel=1e-9)
+    assert set(win.link_busy_seconds) == set(full.link_busy_seconds)
+    for l, v in full.link_busy_seconds.items():
+        assert win.link_busy_seconds[l] == pytest.approx(v, rel=1e-9)
