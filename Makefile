@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test coverage lenet-repro analyze bench bench-memory bench-topology bench-cluster cluster lint help
+.PHONY: test coverage lenet-repro analyze bench bench-memory bench-topology bench-cluster bench-faults cluster lint help
 
 help:
 	@echo "make test          - tier-1 pytest suite (the ROADMAP verify command)"
@@ -14,6 +14,7 @@ help:
 	@echo "make bench-memory  - HBM camping-dilation sweep (repro.memory)"
 	@echo "make bench-topology - fabric sweep: ring/torus/fc (repro.topology)"
 	@echo "make bench-cluster - policy x arrival-rate sweep (repro.cluster)"
+	@echo "make bench-faults  - goodput vs checkpoint interval, Young/Daly check (repro.faults)"
 	@echo "make coverage      - tier-1 suite under pytest-cov with the CI floor"
 	@echo "make cluster       - fleet simulation CLI (POLICY/TRACE/DEVICES vars)"
 	@echo "make lint          - byte-compile + import-sanity checks"
@@ -48,6 +49,9 @@ bench-topology:
 bench-cluster:
 	$(PYTHON) benchmarks/cluster_policies.py
 
+bench-faults:
+	$(PYTHON) benchmarks/failure_sweep.py
+
 POLICY ?= sjf
 TRACE ?= synthetic:bursty
 DEVICES ?= 4
@@ -56,4 +60,4 @@ cluster:
 
 lint:
 	$(PYTHON) -m compileall -q src tests examples benchmarks
-	$(PYTHON) -c "import repro.core, repro.analysis, repro.memory, repro.topology, repro.cluster, repro.distributed.compression"
+	$(PYTHON) -c "import repro.core, repro.analysis, repro.memory, repro.topology, repro.cluster, repro.faults, repro.distributed.compression"

@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
                      makespans, disjoint-link overlap vs the flat baseline
   cluster_policies — repro.cluster policy x arrival-rate sweep (queueing
                      delay / p95 latency / utilization per policy)
+  failure_sweep    — repro.faults goodput vs checkpoint interval under a
+                     seeded failure process, peak vs Young/Daly optimum
   checkpointing    — §III-F fidelity-switching checkpoint flow
   kernels          — Pallas kernel micro-benchmarks + modeled v5e times
   roofline         — §Roofline table from the dry-run artifacts (if present)
@@ -28,8 +30,9 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 def main() -> None:
     from benchmarks import (checkpointing, cluster_policies, conv_algos,
-                            correlation, kernels_bench, memory_camping,
-                            phase_analysis, power_breakdown, topology_sweep)
+                            correlation, failure_sweep, kernels_bench,
+                            memory_camping, phase_analysis, power_breakdown,
+                            topology_sweep)
     sections = [
         ("correlation", correlation.run),
         ("power", power_breakdown.run),
@@ -38,6 +41,7 @@ def main() -> None:
         ("memory_camping", memory_camping.run),
         ("topology_sweep", topology_sweep.run),
         ("cluster_policies", cluster_policies.run),
+        ("failure_sweep", failure_sweep.run),
         ("checkpointing", checkpointing.run),
         ("kernels", kernels_bench.run),
     ]

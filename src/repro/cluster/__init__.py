@@ -22,6 +22,13 @@ Layers (each its own module):
   :class:`ClusterReport`;
 * :mod:`~repro.cluster.export`    — fleet chrome://tracing + ASCII views.
 
+Failure and elasticity come from :mod:`repro.faults`: pass ``faults=``
+(a :class:`repro.faults.FailureProcess`) and ``checkpoint=``
+(a :class:`repro.faults.CheckpointModel`) to :class:`ClusterSim` and the
+loop injects device/link outages, prices checkpoint-restore cycles on the
+simulated clock, reshapes elastic gangs onto surviving devices, and
+reports ``goodput_fraction`` plus a per-device time-conservation ledger.
+
 Usage::
 
     from repro.cluster import (ClusterSim, Fleet, cost_model_for,

@@ -58,6 +58,19 @@ def build_parser() -> argparse.ArgumentParser:
                         "class (what the locality policy avoids)")
     p.add_argument("--quantum", type=float, default=None, metavar="S",
                    help="time-slice seconds: preempt and requeue longer jobs")
+    p.add_argument("--failures", metavar="SPEC", default=None,
+                   help="inject seeded stochastic outages: "
+                        "'mtbf:600,mttr:60' (devices), "
+                        "'mtbf:1h,mttr:2m,dist:weibull:0.7' (heavy tail), "
+                        "'mtbf:600,links:3600,link-mttr:30' (+ ICI links), "
+                        "'...,seed:3'")
+    p.add_argument("--checkpoint", metavar="SPEC", default=None,
+                   help="checkpoint-restore pricing: 'every:600' "
+                        "(hardware-priced save/restore), "
+                        "'every:10m,write:2,restore:5' (fixed costs)")
+    p.add_argument("--no-elastic", action="store_true",
+                   help="killed gangs wait for repairs at full size instead "
+                        "of reshaping onto the surviving devices")
     p.add_argument("--save-trace", metavar="PATH",
                    help="write the (possibly generated) trace JSON here")
     p.add_argument("--chrome-trace", metavar="PATH",
@@ -76,6 +89,7 @@ def main(argv=None) -> int:
     from repro.cluster import (ClusterSim, Fleet, Trace, cost_model_for,
                                fleet_ascii, fleet_chrome_trace, make_policy,
                                synthetic_trace, to_json)
+    from repro.faults import parse_checkpoint_spec, parse_failure_spec
 
     try:
         policy = make_policy(args.policy)
@@ -87,6 +101,9 @@ def main(argv=None) -> int:
         else:
             trace = Trace.load(args.trace)
         cost = cost_model_for(trace, args.cost)
+        faults = parse_failure_spec(args.failures) if args.failures else None
+        ckpt = parse_checkpoint_spec(args.checkpoint) \
+            if args.checkpoint else None
     except (KeyError, ValueError, FileNotFoundError) as e:
         # KeyError's str() wraps the message in quotes; FileNotFoundError's
         # args[0] is a bare errno int — unpack each to the readable form
@@ -104,7 +121,8 @@ def main(argv=None) -> int:
           f"{len(fleet)} devices{topo_note}, policy={policy.name}, "
           f"cost={args.cost} ...", file=sys.stderr)
     sim = ClusterSim(fleet, cost, policy, cold_start_s=args.cold_start,
-                     quantum_s=args.quantum)
+                     quantum_s=args.quantum, faults=faults, checkpoint=ckpt,
+                     elastic=not args.no_elastic)
     rep = sim.run(trace)
 
     s = rep.summary()
@@ -117,6 +135,15 @@ def main(argv=None) -> int:
           f"HoL events {s['hol_events']}, bypasses {s['hol_bypasses']}; "
           f"sim cache {s['cache_hits']} hits / {s['cache_misses']} misses "
           f"({s['cache_hit_rate'] * 100:.0f}%)")
+    if faults is not None or ckpt is not None:
+        print(f"   goodput {s['goodput_fraction'] * 100:.1f}%: "
+              f"{s['fleet_busy_seconds']:.1f} s useful, "
+              f"{s['lost_work_seconds']:.1f} s lost, "
+              f"{s['checkpoint_seconds']:.1f} s checkpointing, "
+              f"{s['restore_seconds']:.1f} s restoring; "
+              f"{s['device_failures']} device + {s['link_failures']} link "
+              f"failures, {s['recoveries']} recoveries, "
+              f"{s['gang_reshapes']} elastic reshapes")
     print()
     print(rep.table())
     print()
@@ -128,6 +155,19 @@ def main(argv=None) -> int:
     if err > 0.01:
         print("RECONCILIATION FAILED (> 1%)", file=sys.stderr)
         return 1
+    if faults is not None or ckpt is not None:
+        # per-device time conservation: occupancy + down + idle == horizon
+        acc = rep.time_accounting()
+        worst = max((max(-a["idle"], 0.0) / a["horizon"]
+                     if a["horizon"] > 0 else 0.0
+                     for a in acc.values()), default=0.0)
+        down = sum(a["down"] for a in acc.values())
+        print(f"time accounting: {down:.1f} s device down-time; "
+              f"busy+setup+ckpt+restore+lost+down+idle == horizon on all "
+              f"{len(acc)} devices (worst residual {worst * 100:.3f}%)")
+        if worst > 0.01:
+            print("TIME ACCOUNTING FAILED (> 1%)", file=sys.stderr)
+            return 1
 
     for path, render in ((args.chrome_trace, lambda: fleet_chrome_trace(rep)),
                          (args.json, lambda: to_json(rep, indent=2))):

@@ -70,6 +70,10 @@ class Fleet:
                 f"but the fleet has {len(slots)} slots")
         self.slots = slots
         self.topology = topology
+        # undirected id pairs of currently-failed fabric links, maintained
+        # by the cluster loop; topology-aware policies prefer sub-slices
+        # whose internal links avoid them
+        self.broken_links: set = set()
 
     def __len__(self) -> int:
         return len(self.slots)

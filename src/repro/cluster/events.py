@@ -18,24 +18,53 @@ the remaining steps there).  Cold starts (``cold_start_s``) charge a setup
 tax whenever a device switches job classes — what the ``locality`` policy
 exists to avoid.
 
+Failures (``faults``, a :class:`repro.faults.FailureProcess`) add FAIL and
+REPAIR events per device and — on a fabric-carrying fleet — per undirected
+ICI link:
+
+* a **device failure** kills the gang running there: work since the last
+  committed checkpoint is lost, survivors free immediately, the failed
+  device stays down until its repair event, and the job requeues (an
+  elastic gang first reshapes onto the surviving device count, paying
+  proportionally more steps-per-device via the slice ``price_factor``);
+* a **link failure** kills gangs whose collectives cross it and removes
+  the link from the fleet's fabric: the ``locality`` policy then prefers
+  intact sub-slices, and gangs that must span a broken link run dilated
+  by the degraded/healthy all-reduce ratio
+  (:func:`repro.faults.gang_dilation` — traffic genuinely re-routes and
+  serializes on the surviving links);
+* a ``checkpoint`` (:class:`repro.faults.CheckpointModel`) prices the
+  save cadence inside every run slice and the restore (+ gang re-shard)
+  a killed job pays before resuming — all on the simulated clock, from
+  the chip's HBM/DCN/ICI bandwidths.  Without a checkpoint model, a
+  slice boundary is a free durable point and a mid-slice failure loses
+  the whole slice.
+
 The resulting :class:`ClusterReport` carries per-job records (queueing
 delay, latency, device), per-device busy/setup time, fleet utilization,
 latency percentiles, head-of-line-blocking counters, the cost-model cache
-hit rate, and ``engine_service_seconds`` — the sum of per-job Engine
-makespans recomputed from the cost model, which must reconcile with the
-event loop's accumulated busy time (the acceptance invariant).
+hit rate, failure/recovery counters with :meth:`ClusterReport.
+goodput_fraction` and per-device :meth:`ClusterReport.time_accounting`
+(busy + setup + checkpoint + restore + lost + down + idle == horizon), and
+``engine_service_seconds`` — the sum of per-job Engine makespans recomputed
+from the cost model, which must reconcile with the event loop's accumulated
+busy time (the acceptance invariant).
 """
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.cluster.devices import CostModel, DeviceSlot, Fleet
 from repro.cluster.scheduler import Policy, QueuedJob
 from repro.cluster.workload import Job, Trace
+from repro.faults.pricing import CheckpointModel
+from repro.faults.processes import DEVICE, LINK, FailureProcess, link_key
+from repro.faults.reroute import gang_dilation
+from repro.topology.graph import undirected_pair
 
-_ARRIVAL, _FINISH = 0, 1          # event kinds (FINISH covers preemptions)
+_ARRIVAL, _FINISH, _FAIL, _REPAIR = 0, 1, 2, 3
 
 
 def percentile(values: Sequence[float], q: float) -> float:
@@ -67,6 +96,10 @@ class JobRecord:
     preemptions: int = 0
     cold_starts: int = 0
     oversubscribed: bool = False
+    failures: int = 0             # times a fault killed this job's gang
+    restores: int = 0             # priced checkpoint restores paid
+    lost_work_s: float = 0.0      # run time discarded by failures
+    reshapes: int = 0             # elastic gang shrinks
 
     @property
     def queue_delay_s(self) -> float:
@@ -79,13 +112,19 @@ class JobRecord:
 
 @dataclass
 class Slice:
-    """One contiguous occupancy of one device (setup or run).
+    """One contiguous occupancy of one device (setup, restore, or run).
 
     A multi-device gang job produces one run slice PER occupied device;
     ``group`` then lists every device id in the gang (empty for the common
     single-device case) so the reconciliation can re-price the slice at the
     gang's step time — the SLOWEST member's engine makespan, since gang
-    members step in lockstep.
+    members step in lockstep.  A run slice's span decomposes as
+    ``useful + ckpt_s + lost_s``: ``steps`` committed training steps, the
+    cadenced checkpoint writes inside the slice, and — when a failure
+    truncated it — the uncommitted tail that must be re-run.
+    ``price_factor`` scales the engine's per-step price for degraded runs
+    (elastic gangs on fewer devices, collectives re-routed around broken
+    links) so the busy-vs-engine reconciliation stays honest.
     """
 
     device_id: str
@@ -93,9 +132,12 @@ class Slice:
     job_class: str
     t0: float
     t1: float
-    kind: str = "run"             # "run" | "setup"
-    steps: int = 0                # training steps executed in this slice
+    kind: str = "run"             # "run" | "setup" | "restore"
+    steps: int = 0                # training steps COMMITTED in this slice
     group: Tuple[str, ...] = ()   # gang device ids (multi-device jobs)
+    ckpt_s: float = 0.0           # checkpoint-write seconds inside the slice
+    lost_s: float = 0.0           # truncated uncommitted work (failures)
+    price_factor: float = 1.0     # per-step dilation vs the healthy engine
 
 
 @dataclass
@@ -108,7 +150,7 @@ class ClusterReport:
     jobs: List[JobRecord]
     slices: List[Slice]
     makespan_s: float
-    fleet_busy_seconds: float         # run slices only (service time)
+    fleet_busy_seconds: float         # useful run time (service time)
     fleet_setup_seconds: float        # cold-start slices
     per_device_busy: Dict[str, float]
     engine_service_seconds: float     # sum of per-job Engine makespans
@@ -117,6 +159,18 @@ class ClusterReport:
     hol_bypasses: int = 0             # starts that jumped an older job
     cache_hits: int = 0
     cache_misses: int = 0
+    checkpoint_seconds: float = 0.0   # cadenced save writes (all devices)
+    restore_seconds: float = 0.0      # restore/re-shard occupancy
+    lost_work_seconds: float = 0.0    # truncated work re-run after failures
+    device_failures: int = 0
+    link_failures: int = 0
+    recoveries: int = 0               # repairs completed within the run
+    gang_reshapes: int = 0            # elastic shrinks applied
+    down_intervals: Dict[str, List[Tuple[float, float]]] = \
+        field(default_factory=dict)
+    link_down_intervals: Dict[str, List[Tuple[float, float]]] = \
+        field(default_factory=dict)
+    failure_marks: List[dict] = field(default_factory=list)
 
     # -- derived ------------------------------------------------------------
     @property
@@ -124,7 +178,23 @@ class ClusterReport:
         cap = self.makespan_s * self.num_devices
         if cap <= 0:
             return 0.0
-        return (self.fleet_busy_seconds + self.fleet_setup_seconds) / cap
+        occupied = (self.fleet_busy_seconds + self.fleet_setup_seconds
+                    + self.checkpoint_seconds + self.restore_seconds
+                    + self.lost_work_seconds)
+        return occupied / cap
+
+    @property
+    def goodput_fraction(self) -> float:
+        """Useful run seconds over all run+recovery occupancy.
+
+        1.0 means every occupied second advanced a job; failures push it
+        down through lost work, checkpoint writes, and restores — the
+        quantity the checkpoint-interval sweep optimizes (Young/Daly)."""
+        denom = (self.fleet_busy_seconds + self.lost_work_seconds
+                 + self.checkpoint_seconds + self.restore_seconds)
+        if denom <= 0:
+            return 1.0
+        return self.fleet_busy_seconds / denom
 
     @property
     def mean_queue_delay_s(self) -> float:
@@ -150,6 +220,44 @@ class ClusterReport:
         return (abs(self.fleet_busy_seconds - self.engine_service_seconds)
                 / self.engine_service_seconds)
 
+    def time_accounting(self) -> Dict[str, Dict[str, float]]:
+        """Per-device occupancy ledger over the makespan horizon.
+
+        Every device's ``busy + setup + checkpoint + restore + lost + down
+        + idle`` equals ``horizon`` by construction (idle is the remainder)
+        — the conservation invariant is that the remainder never goes
+        negative, i.e. occupancy and down time never overlap.  Down
+        intervals are clipped to the horizon (the last repair may land
+        after the final job finishes)."""
+        horizon = self.makespan_s
+        acc = {d: {"busy": 0.0, "setup": 0.0, "checkpoint": 0.0,
+                   "restore": 0.0, "lost": 0.0, "down": 0.0, "idle": 0.0,
+                   "horizon": horizon}
+               for d in self.per_device_busy}
+        for s in self.slices:
+            a = acc.get(s.device_id)
+            if a is None:
+                continue
+            if s.kind == "run":
+                a["busy"] += (s.t1 - s.t0) - s.ckpt_s - s.lost_s
+                a["checkpoint"] += s.ckpt_s
+                a["lost"] += s.lost_s
+            elif s.kind == "setup":
+                a["setup"] += s.t1 - s.t0
+            elif s.kind == "restore":
+                a["restore"] += s.t1 - s.t0
+        for dev, intervals in self.down_intervals.items():
+            a = acc.get(dev)
+            if a is None:
+                continue
+            for t0, t1 in intervals:
+                a["down"] += max(min(t1, horizon) - min(t0, horizon), 0.0)
+        for a in acc.values():
+            a["idle"] = a["horizon"] - sum(
+                a[k] for k in ("busy", "setup", "checkpoint", "restore",
+                               "lost", "down"))
+        return acc
+
     def summary(self) -> Dict[str, float]:
         return {
             "policy": self.policy,
@@ -161,6 +269,14 @@ class ClusterReport:
             "fleet_setup_seconds": self.fleet_setup_seconds,
             "engine_service_seconds": self.engine_service_seconds,
             "utilization": self.utilization,
+            "goodput_fraction": self.goodput_fraction,
+            "checkpoint_seconds": self.checkpoint_seconds,
+            "restore_seconds": self.restore_seconds,
+            "lost_work_seconds": self.lost_work_seconds,
+            "device_failures": self.device_failures,
+            "link_failures": self.link_failures,
+            "recoveries": self.recoveries,
+            "gang_reshapes": self.gang_reshapes,
             "mean_queue_delay_s": self.mean_queue_delay_s,
             "p50_latency_s": self.latency_percentile(0.50),
             "p95_latency_s": self.latency_percentile(0.95),
@@ -177,24 +293,35 @@ class ClusterReport:
         rows = sorted(self.jobs, key=lambda j: -j.queue_delay_s)[:max_rows]
         lines = [f"{'job':>9s} {'class':>14s} {'tenant':>9s} {'device':>13s} "
                  f"{'arrive':>9s} {'qdelay':>9s} {'service':>9s} "
-                 f"{'latency':>9s} {'pre':>3s}"]
+                 f"{'latency':>9s} {'pre':>3s} {'fail':>4s}"]
         lines.append("-" * len(lines[0]))
         for j in rows:
             lines.append(
                 f"{j.job_id:>9s} {j.job_class:>14s} {j.user:>9s} "
                 f"{j.device_id:>13s} {j.arrival_s:>8.2f}s {j.queue_delay_s:>8.2f}s "
-                f"{j.service_s:>8.2f}s {j.latency_s:>8.2f}s {j.preemptions:>3d}")
+                f"{j.service_s:>8.2f}s {j.latency_s:>8.2f}s {j.preemptions:>3d} "
+                f"{j.failures:>4d}")
         if len(self.jobs) > max_rows:
             lines.append(f"... ({len(self.jobs) - max_rows} more jobs)")
         return "\n".join(lines)
 
 
 class ClusterSim:
-    """Bind fleet + cost model + policy; :meth:`run` executes a trace."""
+    """Bind fleet + cost model + policy; :meth:`run` executes a trace.
+
+    ``faults`` injects device/link outages, ``checkpoint`` prices the
+    save/restore cycle, and ``elastic`` lets killed gangs reshape onto the
+    surviving device count instead of waiting for repairs.  All three
+    default off, in which case the loop behaves exactly as the
+    failure-free simulator.
+    """
 
     def __init__(self, fleet: Fleet, cost_model: CostModel, policy: Policy,
                  cold_start_s: float = 0.0,
-                 quantum_s: Optional[float] = None):
+                 quantum_s: Optional[float] = None,
+                 faults: Optional[FailureProcess] = None,
+                 checkpoint: Optional[CheckpointModel] = None,
+                 elastic: bool = True):
         if quantum_s is not None and quantum_s <= 0:
             raise ValueError(f"quantum_s must be positive, got {quantum_s}")
         self.fleet = fleet
@@ -202,75 +329,260 @@ class ClusterSim:
         self.policy = policy
         self.cold_start_s = cold_start_s
         self.quantum_s = quantum_s
+        self.faults = faults
+        self.checkpoint = checkpoint
+        self.elastic = elastic
 
     # ------------------------------------------------------------------
     def run(self, trace: Trace) -> ClusterReport:
-        fleet, cost = self.fleet, self.cost
+        fleet, cost, ckpt = self.fleet, self.cost, self.checkpoint
         for dev in fleet:            # reset between runs: fleets are reusable
             dev.free_at = dev.busy_seconds = dev.setup_seconds = 0.0
             dev.jobs_done, dev.last_class = 0, None
+        fleet.broken_links = set()
         # hand the policy the fleet's shape (topology + id->position map)
         self.policy.bind_fleet(fleet)
 
         ref_hw = fleet.slots[0].hw   # service predictions for SJF ordering
         max_hbm = fleet.max_hbm_bytes()
+        topo = fleet.topology
+        slot_of = {d.device_id: d for d in fleet}
+        pos_of = {d.device_id: i for i, d in enumerate(fleet.slots)}
+        node_id = {d.device_id: (topo.ids[i] if topo is not None else i)
+                   for i, d in enumerate(fleet.slots)}
+
         heap: List[Tuple[float, int, int, object]] = []
         seq = 0
         for job in trace.jobs:
             heapq.heappush(heap, (job.arrival_s, seq, _ARRIVAL, job))
             seq += 1
+        total_jobs = len(trace.jobs)
+        finished = 0
+
+        # failure streams: lazy per-target outage iterators; only the NEXT
+        # outage sits in the heap, the one after is pulled at repair time —
+        # and only while unfinished jobs remain, so infinite renewal
+        # processes cannot keep an otherwise-drained loop alive
+        sched: Dict[Tuple[str, str], Iterator[Tuple[float, float]]] = {}
+
+        def push_outage(tkind: str, key: str, pair) -> None:
+            nonlocal seq
+            nxt = next(sched[(tkind, key)], None)
+            if nxt is not None:
+                heapq.heappush(heap, (nxt[0], seq, _FAIL,
+                                      (tkind, key, pair, nxt)))
+                seq += 1
+
+        if self.faults is not None and trace.jobs:
+            for d in fleet:
+                sched[(DEVICE, d.device_id)] = \
+                    self.faults.device_schedule(d.device_id)
+                push_outage(DEVICE, d.device_id, None)
+            if self.faults.has_link_failures and topo is not None:
+                for a, b in topo.links():
+                    pair = undirected_pair(a, b)
+                    key = link_key(*pair)
+                    if (LINK, key) in sched:
+                        continue
+                    sched[(LINK, key)] = self.faults.link_schedule(key)
+                    push_outage(LINK, key, pair)
 
         queue: List[QueuedJob] = []
         records: Dict[str, JobRecord] = {}
         slices: List[Slice] = []
+        active: Dict[str, dict] = {}          # device id -> shared gang ctx
+        device_down: Dict[str, float] = {}    # device id -> repair time
+        down_iv: Dict[str, List[Tuple[float, float]]] = \
+            {d.device_id: [] for d in fleet}
+        link_iv: Dict[str, List[Tuple[float, float]]] = {}
+        marks: List[dict] = []
         hol_events = 0
         hol_blocked: List[str] = []
         hol_bypasses = 0
+        device_failures = link_failures = recoveries = gang_reshapes = 0
+        arrival_seq = 0
+
+        def state_bytes_of(job_class: str) -> float:
+            """Checkpoint payload: the class's full model/optimizer-state
+            footprint (the allocator's high-water mark on the reference
+            chip — the same number placement shards across the gang)."""
+            return cost.peak_hbm_bytes(job_class, ref_hw)
 
         def start_one(qj: QueuedJob, devs: Tuple[DeviceSlot, ...],
                       now: float) -> float:
             nonlocal seq
             job = qj.job
+            nd = len(devs)
             # gang members step in LOCKSTEP, so the slowest chip's engine
             # makespan prices the whole gang's step
-            per_step = max(cost.report(job.job_class, d.hw).total_seconds
-                           for d in devs)
+            base_step = max(cost.report(job.job_class, d.hw).total_seconds
+                            for d in devs)
+            factor = 1.0
+            if qj.base_devices and nd < qj.base_devices:
+                # elastic shrink: the same global batch over fewer devices
+                factor *= qj.base_devices / nd
+            if nd > 1 and topo is not None and fleet.broken_links:
+                factor *= gang_dilation(
+                    topo, [node_id[d.device_id] for d in devs],
+                    fleet.broken_links, devs[0].hw)
+            per_step = base_step * factor
             cold = [d for d in devs
                     if self.cold_start_s > 0 and d.last_class != job.job_class]
             setup = self.cold_start_s if cold else 0.0
             records[job.job_id].cold_starts += len(cold)
+            rec = records[job.job_id]
+            # restore: a failure sent this job back to its last durable
+            # checkpoint; before re-running it pays the priced read-back
+            # (+ gang re-shard) — interrupted restores pay again
+            done = job.num_steps - qj.remaining_steps
+            restore_s = 0.0
+            if qj.needs_restore and ckpt is not None and done > 0:
+                sb = state_bytes_of(job.job_class)
+                restore_s = max(ckpt.restore_seconds(sb, d.hw, gang=nd)
+                                for d in devs)
+                rec.restores += 1
+            qj.needs_restore = False
+            # checkpoint cadence inside this slice: k steps per save, each
+            # member writing its 1/nd shard (lockstep: slowest shard wins)
+            k, w = 0, 0.0
+            if ckpt is not None and ckpt.interval_s > 0 and per_step > 0:
+                k = ckpt.steps_per_checkpoint(per_step)
+                sb = state_bytes_of(job.job_class)
+                w = max(ckpt.save_seconds(sb / nd, d.hw) for d in devs)
             steps = qj.remaining_steps
             if self.quantum_s is not None and per_step > 0:
                 steps = min(steps, max(int(self.quantum_s / per_step), 1))
-            run_s = steps * per_step
+            if k > 0:
+                # completing slices skip the trailing write (the job is
+                # done); preempted slices pay it so the quantum boundary
+                # stays a durable point, as it is for free without a model
+                n_ck = (steps - 1) // k if steps == qj.remaining_steps \
+                    else -(-steps // k)
+            else:
+                n_ck = 0
+            run_s = steps * per_step + n_ck * w
             t0 = max([now] + [d.free_at for d in devs])
-            group = tuple(d.device_id for d in devs) if len(devs) > 1 else ()
+            run_t0 = t0 + setup + restore_s
+            group = tuple(d.device_id for d in devs) if nd > 1 else ()
+            ctx = {"qj": qj, "devs": devs, "t0": run_t0,
+                   "per_step": per_step, "steps": steps, "k": k, "w": w,
+                   "finish": run_t0 + run_s, "restored": restore_s > 0,
+                   "pre": [], "run": []}
             for d in devs:
                 if d in cold:
-                    slices.append(Slice(d.device_id, job.job_id,
-                                        job.job_class, t0, t0 + setup,
-                                        kind="setup", group=group))
-                slices.append(Slice(d.device_id, job.job_id, job.job_class,
-                                    t0 + setup, t0 + setup + run_s,
-                                    steps=steps, group=group))
-                d.free_at = t0 + setup + run_s
-                d.busy_seconds += run_s
-                d.setup_seconds += setup if d in cold else 0.0
+                    s = Slice(d.device_id, job.job_id, job.job_class,
+                              t0, t0 + setup, kind="setup", group=group)
+                    slices.append(s)
+                    ctx["pre"].append(s)
+                if restore_s > 0:
+                    s = Slice(d.device_id, job.job_id, job.job_class,
+                              t0 + setup, run_t0, kind="restore",
+                              group=group)
+                    slices.append(s)
+                    ctx["pre"].append(s)
+                s = Slice(d.device_id, job.job_id, job.job_class,
+                          run_t0, run_t0 + run_s, steps=steps, group=group,
+                          ckpt_s=n_ck * w, price_factor=factor)
+                slices.append(s)
+                ctx["run"].append(s)
+                d.free_at = run_t0 + run_s
                 d.last_class = job.job_class
-            rec = records[job.job_id]
+                active[d.device_id] = ctx
             if qj.first_start_s is None:
                 qj.first_start_s = t0
                 rec.start_s = t0
             rec.service_s += run_s
             rec.device_id = "+".join(d.device_id for d in devs)
             qj.remaining_steps -= steps
-            finish = t0 + setup + run_s
-            heapq.heappush(heap, (finish, seq, _FINISH, (qj, devs)))
+            finish = run_t0 + run_s
+            heapq.heappush(heap, (finish, seq, _FINISH, (qj, devs, qj.epoch)))
             seq += 1
             return finish
 
+        def predicted_service(qj: QueuedJob) -> float:
+            per = cost.report(qj.job.job_class, ref_hw).total_seconds
+            if qj.base_devices and qj.num_devices < qj.base_devices:
+                per *= qj.base_devices / qj.num_devices
+            return qj.remaining_steps * per
+
+        def kill_gang(ctx: dict, now: float, failed_ids=()) -> None:
+            """A fault killed this running gang: truncate its occupancy to
+            ``now``, roll the job back to its last durable point, requeue."""
+            nonlocal arrival_seq
+            qj: QueuedJob = ctx["qj"]
+            devs = ctx["devs"]
+            qj.epoch += 1                 # invalidate the pending FINISH
+            rec = records[qj.job.job_id]
+            rec.failures += 1
+            steps, k, w, per_step = (ctx["steps"], ctx["k"], ctx["w"],
+                                     ctx["per_step"])
+            e = now - ctx["t0"]
+            if e <= 0:
+                # killed during setup/restore: no run time spent, nothing
+                # committed; an interrupted restore must be paid again
+                committed, spent_ck, lost = 0, 0.0, 0.0
+                for s in ctx["pre"]:
+                    s.t0, s.t1 = min(s.t0, now), min(s.t1, now)
+                for s in ctx["run"]:
+                    s.t0 = s.t1 = now
+                    s.steps = 0
+                qj.needs_restore = ctx["restored"] or qj.needs_restore
+            else:
+                if k > 0:
+                    # whole checkpoint cycles (k steps + one write) commit;
+                    # the partial tail — steps and any in-flight write — is
+                    # lost and re-run after restore
+                    cycle = k * per_step + w
+                    c = int(e // cycle)
+                    committed = min(c * k, steps)
+                    spent_ck = c * w
+                    lost = e - c * cycle
+                else:
+                    committed, spent_ck, lost = 0, 0.0, e
+                for s in ctx["run"]:
+                    s.t1 = now
+                    s.steps = committed
+                    s.ckpt_s = spent_ck
+                    s.lost_s = lost
+                qj.needs_restore = True
+            rec.lost_work_s += lost
+            rec.service_s -= ctx["finish"] - max(now, ctx["t0"])
+            qj.remaining_steps += steps - committed
+            for d in devs:
+                active.pop(d.device_id, None)
+                if d.device_id not in failed_ids:
+                    d.free_at = now       # survivors free immediately
+            qj.seq = arrival_seq
+            arrival_seq += 1
+            qj.service_s = predicted_service(qj)
+            qj.reshape_pending = self.elastic and qj.num_devices > 1
+            queue.append(qj)
+
+        def reshape_pass() -> None:
+            """Elastic gangs killed by a failure reshape onto the surviving
+            device count at their first post-failure scheduling pass (after
+            ALL same-timestamp failures have drained, so simultaneous
+            multi-device outages are seen at once)."""
+            nonlocal gang_reshapes
+            up = len(fleet) - len(device_down)
+            for qj in queue:
+                if not qj.reshape_pending:
+                    continue
+                qj.reshape_pending = False
+                if up <= 0 or up >= qj.num_devices:
+                    continue
+                full_peak = qj.peak_hbm_bytes * qj.num_devices
+                qj.num_devices = max(up, 1)
+                qj.peak_hbm_bytes = full_peak / qj.num_devices
+                qj.oversubscribed = (qj.oversubscribed
+                                     or qj.peak_hbm_bytes > max_hbm)
+                qj.service_s = predicted_service(qj)
+                gang_reshapes += 1
+                records[qj.job.job_id].reshapes += 1
+
         def schedule_pass(now: float) -> None:
             nonlocal hol_events, hol_bypasses
+            reshape_pass()
             while queue:
                 free = fleet.free(now)
                 if not free:
@@ -294,7 +606,6 @@ class ClusterSim:
                 queue.remove(qj)
                 start_one(qj, devs, now)
 
-        arrival_seq = 0
         while heap:
             now = heap[0][0]
             # drain every event at `now` before making placement decisions
@@ -321,12 +632,15 @@ class ClusterSim:
                         service_s=cost.service_seconds(job, ref_hw),
                         peak_hbm_bytes=peak,
                         remaining_steps=job.num_steps, num_devices=nd,
-                        oversubscribed=over))
+                        oversubscribed=over, base_devices=nd))
                     arrival_seq += 1
-                else:
-                    qj, devs = payload
+                elif kind == _FINISH:
+                    qj, devs, epoch = payload
+                    if epoch != qj.epoch:
+                        continue          # gang was killed: stale event
                     for dev in devs:
                         dev.jobs_done += 1
+                        active.pop(dev.device_id, None)
                     if qj.remaining_steps > 0:
                         # preempted: re-sequenced to the BACK of the line,
                         # so fifo + quantum is round-robin time-slicing;
@@ -337,22 +651,83 @@ class ClusterSim:
                         records[qj.job.job_id].preemptions += 1
                         qj.seq = arrival_seq
                         arrival_seq += 1
-                        qj.service_s = qj.remaining_steps * cost.report(
-                            qj.job.job_class, ref_hw).total_seconds
+                        qj.service_s = predicted_service(qj)
                         queue.append(qj)
                     else:
                         records[qj.job.job_id].finish_s = now
+                        finished += 1
+                elif kind == _FAIL:
+                    tkind, key, pair, (fail_t, rep_t) = payload
+                    if finished >= total_jobs:
+                        continue          # fleet drained: outage is moot
+                    marks.append({"t": now, "target": tkind, "key": key})
+                    if tkind == DEVICE:
+                        device_failures += 1
+                        down_iv[key].append((now, rep_t))
+                        device_down[key] = rep_t
+                        ctx = active.get(key)
+                        if ctx is not None:
+                            kill_gang(ctx, now, failed_ids={key})
+                        slot_of[key].free_at = rep_t
+                    else:
+                        link_failures += 1
+                        link_iv.setdefault(key, []).append((now, rep_t))
+                        fleet.broken_links.add(pair)
+                        # kill every gang whose collectives cross the link
+                        for ctx in list({id(c): c for c
+                                         in active.values()}.values()):
+                            gang = ctx["devs"]
+                            if len(gang) <= 1 or topo is None:
+                                continue
+                            inside = topo.internal_links(
+                                [pos_of[d.device_id] for d in gang])
+                            if pair in inside:
+                                kill_gang(ctx, now)
+                    heapq.heappush(heap, (rep_t, seq, _REPAIR,
+                                          (tkind, key, pair)))
+                    seq += 1
+                else:                     # _REPAIR
+                    tkind, key, pair = payload
+                    recoveries += 1
+                    if tkind == DEVICE:
+                        device_down.pop(key, None)
+                    else:
+                        fleet.broken_links.discard(pair)
+                    if finished < total_jobs:
+                        push_outage(tkind, key, pair)
             schedule_pass(now)
 
+        # degenerate truncations (killed before any run time) leave
+        # zero-width slices behind; drop them from the report
+        slices = [s for s in slices if s.t1 > s.t0 or s.steps > 0]
         makespan = max((s.t1 for s in slices), default=0.0)
+        # per-device aggregates from the (possibly truncated) slices — the
+        # single source of truth once failures can rewrite history
+        busy = {d.device_id: 0.0 for d in fleet}
+        setup = dict(busy)
+        ckpt_total = restore_total = lost_total = 0.0
+        for s in slices:
+            if s.kind == "run":
+                busy[s.device_id] += (s.t1 - s.t0) - s.ckpt_s - s.lost_s
+                ckpt_total += s.ckpt_s
+                lost_total += s.lost_s
+            elif s.kind == "setup":
+                setup[s.device_id] += s.t1 - s.t0
+            elif s.kind == "restore":
+                restore_total += s.t1 - s.t0
+        for d in fleet:
+            d.busy_seconds = busy[d.device_id]
+            d.setup_seconds = setup[d.device_id]
         # acceptance invariant RHS, recomputed from the cost model: every
         # run slice is `steps` Engine-simulated step makespans on its
         # device's chip (for gangs: the slowest member's chip, the lockstep
-        # price) — must match the loop's accumulated busy time
+        # price), scaled by the slice's degradation factor — must match the
+        # loop's accumulated useful busy time
         hw_of = {d.device_id: d.hw for d in fleet}
         engine_service = sum(
-            s.steps * max(cost.report(s.job_class, hw_of[d]).total_seconds
-                          for d in (s.group or (s.device_id,)))
+            s.steps * s.price_factor
+            * max(cost.report(s.job_class, hw_of[d]).total_seconds
+                  for d in (s.group or (s.device_id,)))
             for s in slices if s.kind == "run")
         hits, misses = cost.cache_stats()
         ordered = [records[j.job_id] for j in trace.jobs]
@@ -363,13 +738,23 @@ class ClusterSim:
             jobs=ordered,
             slices=slices,
             makespan_s=makespan,
-            fleet_busy_seconds=sum(d.busy_seconds for d in fleet),
-            fleet_setup_seconds=sum(d.setup_seconds for d in fleet),
-            per_device_busy={d.device_id: d.busy_seconds for d in fleet},
+            fleet_busy_seconds=sum(busy.values()),
+            fleet_setup_seconds=sum(setup.values()),
+            per_device_busy=dict(busy),
             engine_service_seconds=engine_service,
             hol_events=hol_events,
             hol_blocked_jobs=tuple(hol_blocked),
             hol_bypasses=hol_bypasses,
             cache_hits=hits,
             cache_misses=misses,
+            checkpoint_seconds=ckpt_total,
+            restore_seconds=restore_total,
+            lost_work_seconds=lost_total,
+            device_failures=device_failures,
+            link_failures=link_failures,
+            recoveries=recoveries,
+            gang_reshapes=gang_reshapes,
+            down_intervals={d: iv for d, iv in down_iv.items() if iv},
+            link_down_intervals=link_iv,
+            failure_marks=marks,
         )

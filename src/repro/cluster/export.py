@@ -7,6 +7,12 @@ one level up the stack: the Chrome trace uses the same Trace Event Format
 ASCII view shades per-device occupancy with the same
 :data:`~repro.analysis.export.SHADES` ramp the phase timeline uses — so a
 cluster report reads like a zoomed-out phase analysis.
+
+Failure runs add three things to the Chrome trace: ``ph: i`` instant
+markers at every device/link failure instant, grey ``down`` slices on the
+failed device's own track covering its repair window, and a ``fabric``
+track carrying link-outage slices — so a goodput regression can be eyeballed
+as "that gang died here and re-restored twice".
 """
 from __future__ import annotations
 
@@ -18,6 +24,8 @@ from repro.cluster.events import ClusterReport
 
 #: counter-track tid, placed after the per-device lanes
 _QUEUE_TID_OFFSET = 1000
+#: fabric (link outage) track tid
+_FABRIC_TID = 1001
 
 
 def _queue_depth_events(report: ClusterReport) -> List[Tuple[float, int]]:
@@ -54,14 +62,39 @@ def fleet_chrome_trace(report: ClusterReport) -> str:
         rec = by_id.get(s.job_id)
         events.append({
             "name": (f"{s.job_class}:{s.job_id}" if s.kind == "run"
-                     else f"setup:{s.job_class}"),
+                     else f"{s.kind}:{s.job_class}"),
             "cat": s.kind, "ph": "X",
             "ts": s.t0 * 1e6, "dur": max((s.t1 - s.t0) * 1e6, 0.01),
             "pid": 0, "tid": tid.get(s.device_id, len(tid)),
             "args": {"job_class": s.job_class, "steps": s.steps,
+                     "ckpt_s": s.ckpt_s, "lost_s": s.lost_s,
+                     "price_factor": s.price_factor,
                      "user": rec.user if rec else "",
                      "queue_delay_s": rec.queue_delay_s if rec else 0.0},
         })
+    # failure story: instant markers, per-device down windows, fabric track
+    for m in report.failure_marks:
+        events.append({"name": f"FAIL {m['target']} {m['key']}",
+                       "cat": "failure", "ph": "i", "s": "g",
+                       "ts": m["t"] * 1e6, "pid": 0,
+                       "tid": tid.get(m["key"], _FABRIC_TID)})
+    for dev, intervals in report.down_intervals.items():
+        for t0, t1 in intervals:
+            events.append({"name": "down", "cat": "down", "ph": "X",
+                           "ts": t0 * 1e6,
+                           "dur": max((t1 - t0) * 1e6, 0.01),
+                           "pid": 0, "tid": tid.get(dev, _FABRIC_TID),
+                           "cname": "grey"})
+    if report.link_down_intervals:
+        events.append({"name": "thread_name", "ph": "M", "pid": 0,
+                       "tid": _FABRIC_TID, "args": {"name": "fabric"}})
+        for key, intervals in sorted(report.link_down_intervals.items()):
+            for t0, t1 in intervals:
+                events.append({"name": f"link {key} down", "cat": "down",
+                               "ph": "X", "ts": t0 * 1e6,
+                               "dur": max((t1 - t0) * 1e6, 0.01),
+                               "pid": 0, "tid": _FABRIC_TID,
+                               "cname": "grey"})
     depth = 0
     for t, delta in _queue_depth_events(report):
         depth += delta
@@ -85,13 +118,20 @@ def to_json(report: ClusterReport, indent: int = None) -> str:
             "service_s": j.service_s, "queue_delay_s": j.queue_delay_s,
             "latency_s": j.latency_s, "num_steps": j.num_steps,
             "preemptions": j.preemptions, "cold_starts": j.cold_starts,
-            "oversubscribed": j.oversubscribed,
+            "oversubscribed": j.oversubscribed, "failures": j.failures,
+            "restores": j.restores, "lost_work_s": j.lost_work_s,
+            "reshapes": j.reshapes,
         } for j in report.jobs],
         "slices": [{
             "device_id": s.device_id, "job_id": s.job_id,
             "job_class": s.job_class, "t0": s.t0, "t1": s.t1,
-            "kind": s.kind, "steps": s.steps,
+            "kind": s.kind, "steps": s.steps, "ckpt_s": s.ckpt_s,
+            "lost_s": s.lost_s, "price_factor": s.price_factor,
         } for s in report.slices],
+        "time_accounting": report.time_accounting(),
+        "down_intervals": report.down_intervals,
+        "link_down_intervals": report.link_down_intervals,
+        "failure_marks": report.failure_marks,
     }
     return json.dumps(doc, indent=indent)
 

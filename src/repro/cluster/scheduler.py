@@ -60,6 +60,10 @@ class QueuedJob:
     oversubscribed: bool = False  # fits no chip in the fleet; runs anyway
     first_start_s: Optional[float] = None
     preemptions: int = 0
+    base_devices: int = 0         # gang size at arrival (elastic baseline)
+    epoch: int = 0                # bumped on failure-kill: stale-event guard
+    needs_restore: bool = False   # next start pays the checkpoint restore
+    reshape_pending: bool = False # elastic shrink decision due next pass
 
     def fits(self, dev: DeviceSlot) -> bool:
         return self.oversubscribed or self.peak_hbm_bytes <= dev.hw.hbm_bytes
@@ -72,12 +76,16 @@ class Policy:
 
     def __init__(self):
         self.topology = None                       # set by bind_fleet
+        self.fleet = None
         self._node_of: Dict[str, int] = {}
 
     def bind_fleet(self, fleet: Fleet) -> None:
         """Give the policy the fleet's shape (called once per run): the
-        interconnect topology and the device-id -> topology-position map."""
+        interconnect topology and the device-id -> topology-position map.
+        The fleet reference also exposes live fabric health
+        (``fleet.broken_links``) to topology-aware policies."""
         self.topology = fleet.topology
+        self.fleet = fleet
         self._node_of = {d.device_id: i for i, d in enumerate(fleet.slots)}
 
     def select(self, queue: Sequence[QueuedJob], free: Sequence[DeviceSlot],
@@ -191,9 +199,19 @@ class Locality(Policy):
             return self._first_fit(qj, free)
         free_at = {self._node_of[d.device_id]: d for d in free
                    if qj.fits(d) and d.device_id in self._node_of}
+        broken = getattr(self.fleet, "broken_links", None)
+        degraded = None
         for cand in self.topology.sub_slices(qj.num_devices):
             if all(pos in free_at for pos in cand):
+                if broken and self.topology.internal_links(cand) & broken:
+                    # crosses a failed link: usable, but keep looking for
+                    # an intact block first (its collectives run dilated)
+                    if degraded is None:
+                        degraded = tuple(free_at[pos] for pos in cand)
+                    continue
                 return tuple(free_at[pos] for pos in cand)
+        if degraded is not None:
+            return degraded
         return self._first_fit(qj, free)
 
 

@@ -99,13 +99,18 @@ class Trainer:
             try:
                 for step in range(start, total):
                     t0 = time.time()
-                    self.failure_plan.straggle(step)
+                    # live plans sleep here; simulated plans only report the
+                    # injected seconds, folded into the measured step time
+                    # below so the straggler detector sees the same signal
+                    injected = self.failure_plan.straggle(step)
                     batch = next(data)
                     state, metrics = step_fn(state, batch)
                     self.failure_plan.check(step)
                     loss = float(metrics["loss"])
                     self.report.losses.append(loss)
                     dt = time.time() - t0
+                    if self.failure_plan.simulated:
+                        dt += injected
                     self._note_step_time(step, dt)
                     if ckpt.maybe_save(step + 1, state):
                         self.report.checkpoints += 1

@@ -25,7 +25,8 @@ from __future__ import annotations
 import itertools
 from dataclasses import dataclass, field
 from functools import lru_cache
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import (AbstractSet, Dict, Iterable, List, Optional, Sequence,
+                    Tuple)
 
 #: cap on how many candidate sub-slices :meth:`Topology.sub_slices` ranks —
 #: placement is a per-event decision, so enumeration must stay cheap.
@@ -35,6 +36,12 @@ _MAX_SLICES = 512
 def link_name(src: int, dst: int) -> str:
     """Canonical engine resource key for the directed link ``src -> dst``."""
     return f"ici:{src}-{dst}"
+
+
+def undirected_pair(a: int, b: int) -> Tuple[int, int]:
+    """Canonical undirected link identity between two device ids — the unit
+    of PHYSICAL link failure (an outage kills both directions at once)."""
+    return (a, b) if a <= b else (b, a)
 
 
 @dataclass(frozen=True)
@@ -206,9 +213,20 @@ class Topology:
             dist += min(delta, d - delta)
         return dist
 
-    def route(self, a: int, b: int) -> List[Tuple[int, int]]:
+    def route(self, a: int, b: int,
+              avoid: Optional[AbstractSet[Tuple[int, int]]] = None
+              ) -> List[Tuple[int, int]]:
         """Dimension-ordered shortest path ``a -> b`` as directed
-        (src_id, dst_id) link hops (wrap-aware on rings/tori)."""
+        (src_id, dst_id) link hops (wrap-aware on rings/tori).
+
+        ``avoid`` is a set of *undirected* id pairs (broken physical
+        links, see :func:`undirected_pair`): when given, the path is the
+        BFS-shortest route over the surviving links only — the fabric with
+        those links removed.  Raises ``ValueError`` when the removal
+        partitions ``a`` from ``b``.
+        """
+        if avoid:
+            return self._route_avoiding(a, b, avoid)
         if a == b:
             return []
         if self.kind == "fc":
@@ -234,6 +252,51 @@ class Topology:
                 cur[ax] = (cur[ax] + step) % d
                 hops.append((self.ids[src], self.ids[self.pos_of(cur)]))
         return hops
+
+    def _route_avoiding(self, a: int, b: int,
+                        avoid: AbstractSet[Tuple[int, int]]
+                        ) -> List[Tuple[int, int]]:
+        """BFS-shortest ``a -> b`` over healthy links (deterministic: the
+        neighbor enumeration order breaks ties)."""
+        if a == b:
+            return []
+        prev: Dict[int, Optional[int]] = {a: None}
+        frontier = [a]
+        while frontier and b not in prev:
+            nxt: List[int] = []
+            for pos in frontier:
+                for nb in self._neighbor_positions(pos):
+                    if nb in prev or undirected_pair(
+                            self.ids[pos], self.ids[nb]) in avoid:
+                        continue
+                    prev[nb] = pos
+                    nxt.append(nb)
+            frontier = nxt
+        if b not in prev:
+            raise ValueError(
+                f"no healthy route {a} -> {b} on {self.name}: removing "
+                f"links {sorted(avoid)} partitions the fabric")
+        hops: List[Tuple[int, int]] = []
+        cur = b
+        while prev[cur] is not None:
+            p = prev[cur]
+            hops.append((self.ids[p], self.ids[cur]))
+            cur = p
+        return list(reversed(hops))
+
+    def internal_links(self, positions: Iterable[int]
+                       ) -> frozenset:
+        """Undirected id pairs of every fabric link with BOTH endpoints in
+        ``positions`` — the links a gang placed on that sub-slice runs its
+        collectives over, and therefore the links whose failure forces the
+        gang to re-route."""
+        ps = set(positions)
+        out = set()
+        for p in ps:
+            for nb in self._neighbor_positions(p):
+                if nb in ps:
+                    out.add(undirected_pair(self.ids[p], self.ids[nb]))
+        return frozenset(out)
 
     def diameter(self, positions: Optional[Iterable[int]] = None) -> int:
         """Max pairwise distance over ``positions`` (default: all nodes)."""

@@ -118,11 +118,13 @@ class _Builder:
 # member geometry helpers
 # ---------------------------------------------------------------------------
 
-def _ring_hop_routes(topo: Topology, order: Sequence[int]
+def _ring_hop_routes(topo: Topology, order: Sequence[int],
+                     broken: Optional[frozenset] = None
                      ) -> List[List[Tuple[int, int]]]:
     """Directed link route for each consecutive (wrapped) pair of ``order``."""
     g = len(order)
-    return [topo.route(order[i], order[(i + 1) % g]) for i in range(g)]
+    return [topo.route(order[i], order[(i + 1) % g], avoid=broken)
+            for i in range(g)]
 
 
 def _ring_transfers(routes: Sequence[List[Tuple[int, int]]], chunk: float
@@ -197,7 +199,8 @@ def lower_collective(kind: str, payload_bytes: float,
                      members: Sequence[int], topo: Topology,
                      hw: HardwareSpec,
                      algorithm: Optional[str] = None,
-                     pairs: Optional[Sequence[Tuple[int, int]]] = None
+                     pairs: Optional[Sequence[Tuple[int, int]]] = None,
+                     broken: Optional[frozenset] = None
                      ) -> TransferSchedule:
     """Lower one collective over ``members`` (global device ids) on ``topo``.
 
@@ -206,6 +209,14 @@ def lower_collective(kind: str, payload_bytes: float,
     torus fabric, ``ring`` otherwise.  ``pairs`` (permutes) lists every
     source->target pair — all of them transfer concurrently, so the
     schedule claims every pair's route, not just the first's.
+
+    ``broken`` is a set of undirected id pairs (failed physical links,
+    :func:`repro.topology.graph.undirected_pair`): every hop then routes
+    over the surviving fabric only (BFS detours), so traffic that used to
+    flow down a dead link re-routes onto its neighbors and *serializes*
+    with the traffic already there — phase times stretch by exactly the
+    induced link camping.  Raises ``ValueError`` if the removals partition
+    the members.
     """
     g = len(members)
     bw = hw.dcn_bw if topo.kind == "fc" \
@@ -247,7 +258,7 @@ def lower_collective(kind: str, payload_bytes: float,
         transfers: Dict[Tuple[int, int], float] = {}
         ph = 1
         for pa, pb in plist:
-            route = topo.route(pa, pb)
+            route = topo.route(pa, pb, avoid=broken)
             ph = max(ph, len(route))
             for hop in route:
                 transfers[hop] = transfers.get(hop, 0.0) + S
@@ -259,16 +270,18 @@ def lower_collective(kind: str, payload_bytes: float,
         shard = S
         for ax in axes:                       # reduce-scatter sweep
             m = len(rings[ax][0])
-            _axis_ring_phases(b, topo, rings[ax], shard / m, m - 1)
+            _axis_ring_phases(b, topo, rings[ax], shard / m, m - 1,
+                              broken=broken)
             shard /= m
         for ax in reversed(axes):             # all-gather sweep back
             m = len(rings[ax][0])
-            _axis_ring_phases(b, topo, rings[ax], shard, m - 1, reverse=True)
+            _axis_ring_phases(b, topo, rings[ax], shard, m - 1, reverse=True,
+                              broken=broken)
             shard *= m
         return b.sched
 
     order = _snake_order(topo, positions)
-    routes = _ring_hop_routes(topo, order)
+    routes = _ring_hop_routes(topo, order, broken)
 
     # phase count by KIND (same on every ring-family algorithm): all-reduce
     # is a reduce-scatter sweep PLUS an all-gather sweep; everything else is
@@ -277,7 +290,7 @@ def lower_collective(kind: str, payload_bytes: float,
 
     if algorithm == "bidir-ring":
         fwd, fh = _ring_transfers(routes, S / (2 * g))
-        rev_routes = _ring_hop_routes(topo, list(reversed(order)))
+        rev_routes = _ring_hop_routes(topo, list(reversed(order)), broken)
         rev, rh = _ring_transfers(rev_routes, S / (2 * g))
         both = dict(fwd)
         for hop, v in rev.items():
@@ -300,7 +313,8 @@ def lower_collective(kind: str, payload_bytes: float,
                 transfers: Dict[Tuple[int, int], float] = {}
                 ph = 1
                 for i in range(g):
-                    route = topo.route(order[i], order[i ^ (1 << s)])
+                    route = topo.route(order[i], order[i ^ (1 << s)],
+                                       avoid=broken)
                     ph = max(ph, len(route))
                     for hop in route:
                         transfers[hop] = transfers.get(hop, 0.0) + chunk
@@ -316,14 +330,15 @@ def lower_collective(kind: str, payload_bytes: float,
 
 def _axis_ring_phases(b: _Builder, topo: Topology,
                       chains: Sequence[Sequence[int]], chunk: float,
-                      nphases: int, reverse: bool = False) -> None:
+                      nphases: int, reverse: bool = False,
+                      broken: Optional[frozenset] = None) -> None:
     """One axis sweep of the torus algorithm: every chain (a ring along this
     axis) moves ``chunk`` around simultaneously for ``nphases`` steps."""
     transfers: Dict[Tuple[int, int], float] = {}
     ph = 1
     for chain in chains:
         order = list(reversed(chain)) if reverse else list(chain)
-        for route in _ring_hop_routes(topo, order):
+        for route in _ring_hop_routes(topo, order, broken):
             ph = max(ph, len(route))
             for hop in route:
                 transfers[hop] = transfers.get(hop, 0.0) + chunk

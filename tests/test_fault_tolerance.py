@@ -50,12 +50,35 @@ def test_failure_recovery_resumes_from_checkpoint(tmp_path):
 
 
 def test_straggler_detection(tmp_path):
+    """Simulated clock: the plan reports the delay instead of sleeping, the
+    trainer folds it into the measured step time, and the rolling-median
+    detector fires — same code path as a live slow host, no wall-clock."""
     rc = _tiny_run_cfg(tmp_path / "c", total=10, every=100)
-    plan = FailurePlan(stragglers={7: 1.0})
+    plan = FailurePlan(stragglers={7: 30.0}, simulated=True)
     trainer = Trainer(rc, use_mesh=False, failure_plan=plan,
                       straggler_factor=3.0)
     report = trainer.train()
     assert report.slow_steps >= 1, "injected straggler not detected"
+
+
+def test_elastic_rescale_on_simulated_clock(tmp_path):
+    """Two hosts dying in the same heartbeat window (accumulated via
+    add_failure) trigger ONE elastic restart that rebuilds on the surviving
+    devices and resumes from the last checkpoint — with the straggler plan
+    on the simulated clock so the whole scenario runs without sleeping."""
+    rc = _tiny_run_cfg(tmp_path / "e", total=8, every=2)
+    plan = FailurePlan(stragglers={2: 30.0, 6: 45.0}, simulated=True)
+    plan.add_failure(5)
+    plan.add_failure(5)            # simultaneous: losses accumulate
+    assert plan.failures == {5: 2}
+    trainer = Trainer(rc, use_mesh=False, failure_plan=plan,
+                      straggler_factor=3.0)
+    report = trainer.train()
+    assert report.restarts == 1    # one failure event, two devices lost
+    assert report.steps_done >= 8
+    assert report.slow_steps >= 1  # injected stragglers still detected
+    from repro.checkpoint.store import list_steps
+    assert list_steps(str(tmp_path / "e"))[-1] == 8
 
 
 def test_grad_accum_matches_no_accum(tmp_path):

@@ -1,0 +1,391 @@
+"""Fault-scenario tests: hand-computed goodput/lost-work arithmetic for the
+failure + checkpoint-restore + elastic-gang cluster loop (repro.faults wired
+through repro.cluster.events).
+
+Every cluster scenario uses TableCostModel (fixed per-step costs, no jax
+capture) and PlannedFailures, so each expected number below is checkable on
+paper: run slices decompose into whole checkpoint cycles (k steps + one
+write) that commit, plus a lost tail; restores are priced reads; down time
+is the outage's MTTR.  The invariants every scenario asserts:
+
+* busy-vs-engine reconciliation stays exact (price_factor honesty);
+* per-device busy + setup + checkpoint + restore + lost + down + idle ==
+  makespan (time conservation, no overlap);
+* goodput = useful / (useful + lost + ckpt + restore).
+"""
+import math
+import time
+
+import pytest
+
+from repro.cluster import (ClusterSim, Fleet, TableCostModel, make_policy,
+                           to_json)
+from repro.cluster.workload import Job, JobClass, Trace, synthetic_trace
+from repro.core.hw import V5E, V5P
+from repro.faults import (DEVICE, LINK, CheckpointModel, Outage,
+                          PlannedFailures, StochasticFailures, daly_interval,
+                          gang_dilation, link_key, parse_checkpoint_spec,
+                          parse_failure_spec, parse_seconds)
+from repro.runtime.failure import FailurePlan, NodeFailure
+from repro.topology.graph import Topology, undirected_pair
+
+GB = 1e9
+
+
+def _trace(jobs, classes):
+    return Trace("hand", jobs, tuple(classes))
+
+
+def _assert_conserved(rep, tol=1e-9):
+    for dev, a in rep.time_accounting().items():
+        total = sum(a[k] for k in ("busy", "setup", "checkpoint", "restore",
+                                   "lost", "down", "idle"))
+        assert total == pytest.approx(a["horizon"], abs=tol), (dev, a)
+        assert a["idle"] >= -tol, f"{dev} overcommitted: {a}"
+    assert rep.reconcile_busy() < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# failure processes & spec grammar
+# ---------------------------------------------------------------------------
+
+def test_planned_failures_sorted_and_validated():
+    pf = PlannedFailures([Outage(DEVICE, "d0", 5.0, 1.0),
+                          Outage(DEVICE, "d0", 1.0, 1.0)])
+    sched = list(pf.device_schedule("d0"))
+    assert sched == [(1.0, 2.0), (5.0, 6.0)]
+    with pytest.raises(ValueError):
+        list(PlannedFailures([Outage(DEVICE, "d0", 1.0, 5.0),
+                              Outage(DEVICE, "d0", 2.0, 1.0)])
+             .device_schedule("d0"))
+    with pytest.raises(ValueError):
+        Outage("gpu", "d0", 1.0, 1.0)
+
+
+def test_stochastic_streams_deterministic_and_independent():
+    a = StochasticFailures(mtbf_s=100.0, mttr_s=10.0, seed=1)
+    b = StochasticFailures(mtbf_s=100.0, mttr_s=10.0, seed=1,
+                           link_mtbf_s=500.0)
+    take = lambda it, n: [next(it) for _ in range(n)]
+    # same seed -> identical stream; adding LINK outages must not reshuffle
+    # the device streams (independent string-seeded RNGs per target)
+    assert take(a.device_schedule("d0"), 5) == take(b.device_schedule("d0"), 5)
+    assert take(a.device_schedule("d0"), 3) != take(a.device_schedule("d1"), 3)
+    # outages never overlap: next failure strictly after previous repair
+    it = a.device_schedule("d0")
+    prev_repair = 0.0
+    for fail, repair in take(it, 50):
+        assert fail > prev_repair and repair >= fail
+        prev_repair = repair
+
+
+def test_weibull_mean_matches_mtbf():
+    sf = StochasticFailures(mtbf_s=200.0, mttr_s=0.0, dist="weibull",
+                            weibull_k=0.7, seed=0)
+    it = sf.device_schedule("d0")
+    gaps, prev = [], 0.0
+    for _ in range(4000):
+        fail, repair = next(it)
+        gaps.append(fail - prev)
+        prev = repair
+    mean = sum(gaps) / len(gaps)
+    assert mean == pytest.approx(200.0, rel=0.1)
+
+
+def test_failure_spec_grammar():
+    sf = parse_failure_spec("mtbf:1h,mttr:2m,links:30m,link-mttr:30,"
+                            "dist:weibull:0.5,seed:9")
+    assert sf.mtbf_s == 3600.0 and sf.mttr_s == 120.0
+    assert sf.link_mtbf_s == 1800.0 and sf.link_mttr_s == 30.0
+    assert sf.dist == "weibull" and sf.weibull_k == 0.5 and sf.seed == 9
+    assert parse_seconds("600") == 600.0 and parse_seconds("1.5h") == 5400.0
+    for bad in ("mtbf:600,bogus:1", "mttr:60", "mtbf:xyz",
+                "mtbf:600,dist:gamma"):
+        with pytest.raises(KeyError):
+            parse_failure_spec(bad)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint pricing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_pricing_from_hardware():
+    cm = CheckpointModel(interval_s=100.0, base_s=0.5)
+    S = 8 * GB
+    assert cm.save_seconds(S, V5E) == pytest.approx(
+        0.5 + S / V5E.hbm_bw + S / V5E.dcn_bw)
+    # single-device restore: host pull + HBM fill, no re-shard
+    assert cm.restore_seconds(S, V5E, gang=1) == pytest.approx(
+        0.5 + S / V5E.dcn_bw + S / V5E.hbm_bw)
+    # gang restore: each member pulls 1/g from the host, then all-gathers
+    # the (g-1)/g remainder over the ICI
+    g = 4
+    ici_bw = V5E.ici_links_per_axis * V5E.ici_link_bw
+    assert cm.restore_seconds(S, V5E, gang=g) == pytest.approx(
+        0.5 + S / g / V5E.dcn_bw + S / V5E.hbm_bw
+        + (g - 1) / g * S / ici_bw + (g - 1) * V5E.ici_latency_s)
+    # a faster chip restores faster
+    assert cm.restore_seconds(S, V5P) < cm.restore_seconds(S, V5E)
+    assert cm.steps_per_checkpoint(3.0) == 33          # round(100/3)
+    assert cm.steps_per_checkpoint(1000.0) == 1        # at least one step
+    assert CheckpointModel().steps_per_checkpoint(3.0) == 0
+
+
+def test_daly_interval():
+    assert daly_interval(2.0, 250.0) == pytest.approx(math.sqrt(1000.0))
+    assert daly_interval(0.0, 250.0) == math.inf
+    assert daly_interval(2.0, math.inf) == math.inf
+
+
+def test_checkpoint_spec_grammar():
+    cm = parse_checkpoint_spec("every:10m,write:2,restore:5,base:0.5")
+    assert cm == CheckpointModel(interval_s=600.0, write_s=2.0,
+                                 restore_s=5.0, base_s=0.5)
+    assert parse_checkpoint_spec("600").interval_s == 600.0
+    with pytest.raises(KeyError):
+        parse_checkpoint_spec("cadence:600")
+
+
+# ---------------------------------------------------------------------------
+# hand-computed cluster scenarios
+# ---------------------------------------------------------------------------
+
+def _single_device_setup():
+    cost = TableCostModel({"train": (1.0, 1 * GB)})
+    trace = _trace([Job("j0", "train", 0.0, 4)], [JobClass("train", "lenet")])
+    fleet = Fleet.from_spec("1")
+    return cost, trace, fleet, fleet.slots[0].device_id
+
+
+def test_single_failure_mid_run():
+    """4 steps @ 1 s, checkpoint every 2 steps (w=0.5), restore 1.0;
+    device dies at t=3.2 for 1 s.
+
+    Cycle = 2*1 + 0.5 = 2.5 s, so at t=3.2 one cycle committed (2 steps,
+    one write), lost tail = 3.2 - 2.5 = 0.7.  Down [3.2, 4.2], restore
+    [4.2, 5.2], remaining 2 steps [5.2, 7.2] (no trailing write: the job
+    completes).  Goodput = 4 / (4 + 0.7 + 0.5 + 1.0)."""
+    cost, trace, fleet, dev = _single_device_setup()
+    sim = ClusterSim(fleet, cost, make_policy("fifo"),
+                     faults=PlannedFailures([Outage(DEVICE, dev, 3.2, 1.0)]),
+                     checkpoint=CheckpointModel(interval_s=2.0, write_s=0.5,
+                                                restore_s=1.0))
+    rep = sim.run(trace)
+    assert rep.makespan_s == pytest.approx(7.2)
+    assert rep.fleet_busy_seconds == pytest.approx(4.0)
+    assert rep.checkpoint_seconds == pytest.approx(0.5)
+    assert rep.lost_work_seconds == pytest.approx(0.7)
+    assert rep.restore_seconds == pytest.approx(1.0)
+    assert rep.goodput_fraction == pytest.approx(4.0 / 6.2)
+    assert rep.device_failures == 1 and rep.recoveries == 1
+    j = rep.jobs[0]
+    assert (j.failures, j.restores) == (1, 1)
+    assert j.lost_work_s == pytest.approx(0.7)
+    assert j.finish_s == pytest.approx(7.2)
+    acct = rep.time_accounting()[dev]
+    assert acct["down"] == pytest.approx(1.0)
+    assert acct["idle"] == pytest.approx(0.0)
+    _assert_conserved(rep)
+
+
+def test_failure_during_restore_pays_again():
+    """Same as above plus a second outage at t=4.7 — inside the restore
+    window [4.2, 5.2].  The restore truncates (0.5 s spent), the job still
+    needs it, so after the repair at 5.2 it restores again [5.2, 6.2] and
+    runs [6.2, 8.2].  No additional work is lost (none had resumed)."""
+    cost, trace, fleet, dev = _single_device_setup()
+    sim = ClusterSim(fleet, cost, make_policy("fifo"),
+                     faults=PlannedFailures([Outage(DEVICE, dev, 3.2, 1.0),
+                                             Outage(DEVICE, dev, 4.7, 0.5)]),
+                     checkpoint=CheckpointModel(interval_s=2.0, write_s=0.5,
+                                                restore_s=1.0))
+    rep = sim.run(trace)
+    assert rep.makespan_s == pytest.approx(8.2)
+    assert rep.fleet_busy_seconds == pytest.approx(4.0)
+    assert rep.lost_work_seconds == pytest.approx(0.7)   # unchanged
+    assert rep.restore_seconds == pytest.approx(1.5)     # 0.5 cut + 1.0 full
+    assert rep.goodput_fraction == pytest.approx(4.0 / 6.7)
+    j = rep.jobs[0]
+    assert (j.failures, j.restores) == (2, 2)
+    _assert_conserved(rep)
+
+
+def test_no_checkpoint_model_loses_whole_slice():
+    """Without a checkpoint model a slice boundary is the only durable
+    point: the same failure at t=3.2 discards all 3.2 s and the job
+    restarts from scratch (no restore cost either)."""
+    cost, trace, fleet, dev = _single_device_setup()
+    sim = ClusterSim(fleet, cost, make_policy("fifo"),
+                     faults=PlannedFailures([Outage(DEVICE, dev, 3.2, 1.0)]))
+    rep = sim.run(trace)
+    assert rep.makespan_s == pytest.approx(8.2)          # 3.2 + 1 down + 4
+    assert rep.lost_work_seconds == pytest.approx(3.2)
+    assert rep.checkpoint_seconds == rep.restore_seconds == 0.0
+    assert rep.goodput_fraction == pytest.approx(4.0 / 7.2)
+    _assert_conserved(rep)
+
+
+def test_link_failure_forces_reroute_or_relocation():
+    """A 2-gang running across ring link 0-1 is killed when that link dies.
+
+    Under ``locality`` the gang restarts on an INTACT sub-slice (price
+    factor 1.0 — the policy routes around the dead link by placement);
+    pinned to the broken pair (fleet of exactly 2 on the 4-ring's nodes
+    0,1 is impossible, so instead compare against ``fifo`` first-fit which
+    puts it back on devices 0,1) the collectives re-route the long way
+    round the ring and every step dilates by the degraded/healthy
+    all-reduce ratio > 1."""
+    classes = [JobClass("gang", "lenet", num_devices=2)]
+    cost = TableCostModel({"gang": (1.0, 1 * GB)})
+    pair = undirected_pair(0, 1)
+
+    def run(policy):
+        trace = _trace([Job("g0", "gang", 0.0, 6, num_devices=2)], classes)
+        fleet = Fleet.from_spec("4", topology="ring")
+        faults = PlannedFailures([Outage(LINK, link_key(0, 1), 2.5, 1000.0)])
+        sim = ClusterSim(Fleet.from_spec("4", topology="ring"),
+                         TableCostModel({"gang": (1.0, 1 * GB)}),
+                         make_policy(policy), faults=faults)
+        return sim.run(trace)
+
+    rep = run("locality")
+    assert rep.link_failures == 1
+    restarted = [s for s in rep.slices if s.kind == "run" and s.steps > 0]
+    assert restarted
+    # relocated onto an intact block: no dilation, full speed
+    assert all(s.price_factor == pytest.approx(1.0) for s in restarted)
+    assert {s.device_id for s in restarted} != {"dev0:tpu-v5e",
+                                                "dev1:tpu-v5e"}
+    _assert_conserved(rep)
+
+    rep2 = run("fifo")
+    restarted2 = [s for s in rep2.slices if s.kind == "run" and s.steps > 0]
+    assert restarted2
+    # first-fit lands back on 0,1: traffic re-routes 0->3->2->1 and steps
+    # stretch by the lowered degraded/healthy schedule ratio
+    topo = Topology.from_spec("ring", n=4)
+    dil = gang_dilation(topo, [0, 1], {pair}, V5E)
+    assert dil > 1.0
+    assert all(s.price_factor == pytest.approx(dil) for s in restarted2)
+    assert rep2.makespan_s > rep.makespan_s
+    _assert_conserved(rep2)
+
+
+def test_elastic_gang_reshapes_onto_survivors():
+    """A 2-gang loses both members at t=2.0 (same-instant outages, 5 s
+    repair); the third device survives, so the elastic job reshapes to 1
+    device at price factor 2 (same global batch, half the gang).
+
+    With checkpoints every 1 step (w=0.1, cycle 1.1): 1 step committed at
+    the kill, 0.9 s lost.  Restore 0.2 on the survivor, then 5 steps at
+    2 s/step with 4 interior writes = 10.4 s -> finishes at 12.6."""
+    classes = [JobClass("gang", "lenet", num_devices=2)]
+    cost = TableCostModel({"gang": (1.0, 1 * GB)})
+    trace = _trace([Job("g0", "gang", 0.0, 6, num_devices=2)], classes)
+    fleet = Fleet.from_spec("3")
+    ids = [d.device_id for d in fleet]
+    faults = PlannedFailures([Outage(DEVICE, ids[0], 2.0, 5.0),
+                              Outage(DEVICE, ids[1], 2.0, 5.0)])
+    sim = ClusterSim(fleet, cost, make_policy("fifo"), faults=faults,
+                     checkpoint=CheckpointModel(interval_s=1.0, write_s=0.1,
+                                                restore_s=0.2))
+    rep = sim.run(trace)
+    assert rep.device_failures == 2        # both outages recorded...
+    assert rep.jobs[0].failures == 1       # ...but ONE gang kill
+    assert rep.gang_reshapes == 1 and rep.jobs[0].reshapes == 1
+    assert rep.makespan_s == pytest.approx(12.6)
+    reshaped = [s for s in rep.slices if s.kind == "run" and s.t0 > 2.0]
+    assert len(reshaped) == 1 and reshaped[0].device_id == ids[2]
+    assert reshaped[0].price_factor == pytest.approx(2.0)
+    # per-DEVICE seconds: both members lose 0.9 each; the kept write cost
+    # 0.1 on each member, the reshaped run pays 4 interior writes
+    assert rep.lost_work_seconds == pytest.approx(1.8)
+    assert rep.checkpoint_seconds == pytest.approx(0.6)
+    assert rep.restore_seconds == pytest.approx(0.2)
+    assert rep.fleet_busy_seconds == pytest.approx(12.0)
+    _assert_conserved(rep)
+
+    # inelastic: the gang waits for the repairs at t=7 and resumes at
+    # full size instead of limping on one device
+    fleet2 = Fleet.from_spec("3")
+    sim2 = ClusterSim(fleet2, TableCostModel({"gang": (1.0, 1 * GB)}),
+                      make_policy("fifo"),
+                      faults=PlannedFailures([Outage(DEVICE, ids[0], 2.0, 5.0),
+                                              Outage(DEVICE, ids[1], 2.0, 5.0)]),
+                      checkpoint=CheckpointModel(interval_s=1.0, write_s=0.1,
+                                                 restore_s=0.2),
+                      elastic=False)
+    rep2 = sim2.run(trace)
+    assert rep2.gang_reshapes == 0
+    resumed = [s for s in rep2.slices if s.kind == "run" and s.t0 > 2.0]
+    assert all(s.price_factor == pytest.approx(1.0) for s in resumed)
+    # restore at 7.0 + 0.2, 5 steps + 4 writes = 5.4 -> 12.6 again (tie by
+    # construction; the point is the path, asserted above)
+    assert rep2.makespan_s == pytest.approx(12.6)
+    _assert_conserved(rep2)
+
+
+def test_goodput_non_increasing_in_failure_rate():
+    """Deterministic rate ladder: same seeded workload, increasing device
+    failure rate -> goodput never goes up, and the loop always drains."""
+    trace = synthetic_trace("synthetic:poisson", n_jobs=30, seed=5)
+    table = {c.name: (0.2 * c.cost_scale, 1 * GB) for c in trace.classes}
+    goodputs = []
+    for mtbf in (math.inf, 400.0, 200.0, 100.0, 50.0):
+        fleet = Fleet.from_spec("4")
+        faults = None if math.isinf(mtbf) else StochasticFailures(
+            mtbf_s=mtbf, mttr_s=20.0, seed=11)
+        rep = ClusterSim(fleet, TableCostModel(table), make_policy("fifo"),
+                         faults=faults,
+                         checkpoint=CheckpointModel(interval_s=30.0,
+                                                    write_s=0.5,
+                                                    restore_s=1.0)).run(trace)
+        assert all(j.finish_s >= j.arrival_s for j in rep.jobs)
+        _assert_conserved(rep, tol=1e-6)
+        goodputs.append(rep.goodput_fraction)
+    assert goodputs[0] == pytest.approx(1.0, abs=1e-12) or goodputs[0] < 1.0
+    for hi, lo in zip(goodputs, goodputs[1:]):
+        assert lo <= hi + 1e-9, goodputs
+
+
+def test_zero_failure_run_identical_to_legacy():
+    """faults=None and an empty failure plan produce byte-identical reports
+    (the fault machinery is invisible until something actually breaks)."""
+    trace = synthetic_trace("synthetic:multislice", n_jobs=25, seed=4)
+    table = {c.name: (0.3 * c.cost_scale, 1 * GB) for c in trace.classes}
+
+    def run(**kw):
+        return ClusterSim(Fleet.from_spec("4", topology="torus:2x2"),
+                          TableCostModel(table), make_policy("locality"),
+                          **kw).run(trace)
+
+    base = run()
+    assert to_json(run(faults=PlannedFailures([]))) == to_json(base)
+    assert base.goodput_fraction == 1.0
+    assert base.device_failures == 0 and not base.down_intervals
+
+
+# ---------------------------------------------------------------------------
+# runtime FailurePlan (trainer-side injection)
+# ---------------------------------------------------------------------------
+
+def test_failure_plan_accumulates_same_step():
+    plan = FailurePlan()
+    plan.add_failure(5)
+    plan.add_failure(5, 2)
+    plan.add_failure(7)
+    assert plan.failures == {5: 3, 7: 1}
+    with pytest.raises(NodeFailure) as e:
+        plan.check(5)
+    assert e.value.lost_devices == 3
+    plan.check(5)                   # fires once per step
+    with pytest.raises(NodeFailure):
+        plan.check(7)
+
+
+def test_simulated_straggle_does_not_sleep():
+    plan = FailurePlan(stragglers={3: 30.0}, simulated=True)
+    t0 = time.time()
+    assert plan.straggle(3) == 30.0
+    assert plan.straggle(4) == 0.0
+    assert time.time() - t0 < 5.0   # 30 simulated seconds, ~0 real ones

@@ -66,3 +66,51 @@ def test_summary_matches_golden(name, arch, seq_len, batch, update_golden):
         f"{name}: summary drifted from golden (expected, got): {drift} — "
         f"if this change is intended, rerun with --update-golden and "
         f"review the JSON diff")
+
+
+def _cluster_faults_summary() -> dict:
+    """Seeded failure-scenario fleet run: stochastic device+link outages on
+    a torus, hardware-priced checkpoint-restore, elastic gangs.  Every
+    number in the summary (goodput, lost work, recovery counters, latency
+    percentiles) flows through the full fail -> detect -> reshape ->
+    restore -> resume path, so this snapshot pins the entire fault layer.
+    TableCostModel keeps it capture-free (no jax) and exactly seeded."""
+    from repro.cluster import ClusterSim, Fleet, TableCostModel, make_policy
+    from repro.cluster.workload import synthetic_trace
+    from repro.faults import CheckpointModel, StochasticFailures
+
+    trace = synthetic_trace("synthetic:multislice", n_jobs=40, seed=7)
+    table = {c.name: (0.05 * c.cost_scale, 2e9) for c in trace.classes}
+    sim = ClusterSim(
+        Fleet.from_spec("4", topology="torus:2x2"),
+        TableCostModel(table), make_policy("locality"),
+        faults=StochasticFailures(mtbf_s=300.0, mttr_s=20.0, dist="weibull",
+                                  weibull_k=0.7, link_mtbf_s=600.0,
+                                  link_mttr_s=15.0, seed=3),
+        checkpoint=CheckpointModel(interval_s=10.0, base_s=0.1))
+    return sim.run(trace).summary()
+
+
+def test_cluster_faults_matches_golden(update_golden):
+    got = _cluster_faults_summary()
+    path = GOLDEN_DIR / "cluster_faults.json"
+    if update_golden:
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps(got, indent=2, sort_keys=True) + "\n")
+    assert path.exists(), (
+        f"no golden snapshot at {path}; create it with "
+        f"pytest tests/test_golden.py --update-golden")
+    want = json.loads(path.read_text())
+    assert set(got) == set(want), (
+        f"summary() keys changed: +{sorted(set(got) - set(want))} "
+        f"-{sorted(set(want) - set(got))} — regenerate goldens if intended")
+    drift = {k: (want[k], got[k]) for k in want
+             if got[k] != pytest.approx(want[k], rel=1e-6, abs=1e-18)}
+    assert not drift, (
+        f"cluster_faults: summary drifted from golden (expected, got): "
+        f"{drift} — if this change is intended, rerun with --update-golden "
+        f"and review the JSON diff")
+    # the snapshot must actually exercise the fault path
+    assert want["device_failures"] > 0 and want["link_failures"] > 0
+    assert want["gang_reshapes"] > 0
+    assert 0.0 < want["goodput_fraction"] < 1.0

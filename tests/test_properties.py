@@ -14,6 +14,18 @@ Generalizes the PR 2 hand-built reconcile test to property form:
   bytes, launch overhead, per-link busy — and the makespan itself) equals
   the full run's.
 
+Plus the fault-layer (repro.faults) invariants over random failure plans:
+
+* **time conservation** — for every device, busy + setup + checkpoint +
+  restore + lost + down + idle == horizon, with idle >= 0 (nothing runs
+  while down, no interval is double-charged);
+* **goodput dominance** — injecting failures into a single-device
+  homogeneous workload never IMPROVES goodput (checkpoint counts are
+  invariant under cycle-boundary splits, so failures only ever add lost
+  tails, restores and down time);
+* **zero-failure transparency** — an empty failure plan produces a report
+  byte-identical to a run with no fault machinery at all.
+
 Hypothesis is a CI-only dependency (not shipped in the runtime image), so
 the whole module importorskips.
 """
@@ -25,6 +37,11 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import Engine, V5E, parse_hlo_module  # noqa: E402
+from repro.cluster import (ClusterSim, Fleet, TableCostModel,  # noqa: E402
+                           make_policy, to_json)
+from repro.cluster.workload import Job, JobClass, Trace  # noqa: E402
+from repro.faults import (DEVICE, CheckpointModel, Outage,  # noqa: E402
+                          PlannedFailures)
 from repro.topology import ici_transfer_seconds  # noqa: E402
 
 _ADDC = """
@@ -127,3 +144,103 @@ def test_window_fast_forward_equals_full_totals(mod, w0, span):
     assert set(win.link_busy_seconds) == set(full.link_busy_seconds)
     for l, v in full.link_busy_seconds.items():
         assert win.link_busy_seconds[l] == pytest.approx(v, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# fault-layer invariants (repro.faults x repro.cluster)
+# ---------------------------------------------------------------------------
+
+GB = 1e9
+
+#: (gap_to_next_failure, down_s) pairs -> non-overlapping renewal outages
+outage_gaps = st.lists(
+    st.tuples(st.floats(0.1, 30.0), st.floats(0.0, 5.0)),
+    min_size=0, max_size=4)
+
+checkpoints = st.one_of(
+    st.none(),
+    st.builds(CheckpointModel,
+              interval_s=st.floats(0.5, 10.0),
+              write_s=st.floats(0.05, 1.0),
+              restore_s=st.floats(0.05, 2.0)))
+
+
+def _outages(device_ids, gap_lists):
+    out = []
+    for dev, gaps in zip(device_ids, gap_lists):
+        t = 0.0
+        for gap, down in gaps:
+            t += gap
+            out.append(Outage(DEVICE, dev, t, down))
+            t += down
+    return PlannedFailures(out)
+
+
+def _single_class_trace(steps_list, per_step):
+    jobs = [Job(f"j{i}", "train", 0.0, s) for i, s in enumerate(steps_list)]
+    return (Trace("prop", jobs, (JobClass("train", "lenet"),)),
+            TableCostModel({"train": (per_step, 1 * GB)}))
+
+
+@settings(max_examples=25, deadline=None)
+@given(steps=st.lists(st.integers(1, 12), min_size=1, max_size=5),
+       per_step=st.floats(0.2, 3.0),
+       gaps=st.lists(outage_gaps, min_size=2, max_size=2),
+       ckpt=checkpoints)
+def test_fault_time_conservation(steps, per_step, gaps, ckpt):
+    """busy+setup+ckpt+restore+lost+down+idle == horizon on every device,
+    idle >= 0 — under arbitrary outage plans and checkpoint cadences."""
+    trace, cost = _single_class_trace(steps, per_step)
+    fleet = Fleet.from_spec("2")
+    faults = _outages([d.device_id for d in fleet], gaps)
+    rep = ClusterSim(fleet, cost, make_policy("fifo"),
+                     faults=faults, checkpoint=ckpt).run(trace)
+    assert all(j.finish_s >= j.arrival_s for j in rep.jobs)
+    assert rep.reconcile_busy() < 1e-9
+    for dev, a in rep.time_accounting().items():
+        total = sum(a[k] for k in ("busy", "setup", "checkpoint", "restore",
+                                   "lost", "down", "idle"))
+        assert total == pytest.approx(a["horizon"], abs=1e-6), (dev, a)
+        assert a["idle"] >= -1e-9, (dev, a)
+    assert 0.0 <= rep.goodput_fraction <= 1.0
+    assert rep.lost_work_seconds >= 0 and rep.restore_seconds >= 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(steps=st.lists(st.integers(1, 12), min_size=1, max_size=4),
+       per_step=st.floats(0.2, 3.0),
+       gaps=outage_gaps,
+       ckpt=checkpoints)
+def test_failures_never_improve_goodput(steps, per_step, gaps, ckpt):
+    """Single-device homogeneous workload: checkpoint counts are invariant
+    under cycle-boundary splits, so ANY outage plan only adds lost tails,
+    restores and down time — goodput is pointwise dominated by the
+    zero-failure run (and useful work is identical)."""
+    trace, cost = _single_class_trace(steps, per_step)
+    fleet = Fleet.from_spec("1")
+
+    def run(faults):
+        return ClusterSim(Fleet.from_spec("1"), cost, make_policy("fifo"),
+                          faults=faults, checkpoint=ckpt).run(trace)
+
+    base = run(None)
+    faulty = run(_outages([fleet.slots[0].device_id], [gaps]))
+    assert faulty.fleet_busy_seconds == pytest.approx(
+        base.fleet_busy_seconds, rel=1e-9)
+    assert faulty.goodput_fraction <= base.goodput_fraction + 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(steps=st.lists(st.integers(1, 8), min_size=1, max_size=4),
+       per_step=st.floats(0.2, 3.0),
+       ckpt=checkpoints)
+def test_empty_failure_plan_is_transparent(steps, per_step, ckpt):
+    """faults=PlannedFailures([]) must be indistinguishable from faults=None
+    down to the serialized report bytes."""
+    trace, cost = _single_class_trace(steps, per_step)
+
+    def run(faults):
+        return ClusterSim(Fleet.from_spec("2"), cost, make_policy("fifo"),
+                          faults=faults, checkpoint=ckpt).run(trace)
+
+    assert to_json(run(PlannedFailures([]))) == to_json(run(None))
