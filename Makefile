@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test coverage lenet-repro analyze bench bench-memory bench-topology bench-cluster bench-faults cluster lint help
+.PHONY: test coverage lenet-repro analyze bench bench-memory bench-topology bench-cluster bench-faults bench-perf cluster lint help
 
 help:
 	@echo "make test          - tier-1 pytest suite (the ROADMAP verify command)"
@@ -15,6 +15,7 @@ help:
 	@echo "make bench-topology - fabric sweep: ring/torus/fc (repro.topology)"
 	@echo "make bench-cluster - policy x arrival-rate sweep (repro.cluster)"
 	@echo "make bench-faults  - goodput vs checkpoint interval, Young/Daly check (repro.faults)"
+	@echo "make bench-perf    - simulator-core throughput vs BENCH_perf.json (UPDATE=1 refreshes)"
 	@echo "make coverage      - tier-1 suite under pytest-cov with the CI floor"
 	@echo "make cluster       - fleet simulation CLI (POLICY/TRACE/DEVICES vars)"
 	@echo "make lint          - byte-compile + import-sanity checks"
@@ -51,6 +52,10 @@ bench-cluster:
 
 bench-faults:
 	$(PYTHON) benchmarks/failure_sweep.py
+
+# UPDATE=1 rewrites the committed 'after' baseline in BENCH_perf.json
+bench-perf:
+	$(PYTHON) benchmarks/perf_core.py $(if $(UPDATE),--update)
 
 POLICY ?= sjf
 TRACE ?= synthetic:bursty

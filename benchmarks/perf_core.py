@@ -1,0 +1,266 @@
+"""Fast-core throughput benchmarks: the simulator's own speed, tracked.
+
+Three throughput numbers, one per refactored hot path:
+
+* ``engine_ops_per_sec``      — timeline ops scheduled per second by
+  repeated ``Engine.simulate`` calls on a capture-free synthetic module
+  (``cache=None``, so every call re-schedules; the batched tape scheduler
+  makes repeats fast, the retained legacy walk is measured alongside);
+* ``cluster_events_per_sec``  — heap events drained per second on the
+  multislice-torus fault sweep (16-device torus:4x4, 400 gang jobs,
+  seeded weibull device+link failures, priced checkpoints — the scaled-up
+  twin of the ``cluster_faults`` golden scenario);
+* ``topology_lowerings_per_sec`` — ``lower_collective`` calls per second
+  for a 16-member torus all-reduce over a payload sweep (distinct payloads,
+  so the payload-independent phase-plan cache is what is being measured,
+  not the per-payload schedule memo).
+
+Baselines live in ``BENCH_perf.json`` (committed):
+
+* ``python benchmarks/perf_core.py``                 — measure and print;
+* ``python benchmarks/perf_core.py --record-before`` — write the ``before``
+  section (run once, pre-refactor, in the refactor PR itself);
+* ``python benchmarks/perf_core.py --update``        — write the ``after``
+  section + speedups (``make bench-perf UPDATE=1``);
+* ``python benchmarks/perf_core.py --smoke``         — CI gate: re-measure
+  and fail if any throughput regressed >30% against the committed
+  ``after`` baseline, compared in calibration-normalized units so the
+  committed numbers survive a machine change.
+
+Machine drift: every run measures a fixed pure-Python spin loop
+(``calibrate()``); throughputs are compared as ``value / spin_mops`` so a
+slower CI box scales both sides.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+BASELINE_PATH = REPO / "BENCH_perf.json"
+REGRESSION_TOLERANCE = 0.30          # CI fails beyond 30% normalized loss
+
+# -- scenario constants (change => invalidate/regenerate the baseline) -----
+ENGINE_OPS = 64
+ENGINE_ELEMS = 1 << 16
+CLUSTER_DEVICES = "16"
+CLUSTER_TOPOLOGY = "torus:4x4"
+CLUSTER_JOBS = 400
+TOPOLOGY_PAYLOADS = 32
+
+
+def calibrate(loops: int = 300_000) -> float:
+    """Fixed spin-loop throughput in M ops/s — the machine-speed yardstick."""
+    t0 = time.perf_counter()
+    acc = 0
+    for i in range(loops):
+        acc += i * 3 + 1
+    dt = time.perf_counter() - t0
+    return loops / dt / 1e6 if dt > 0 else 0.0
+
+
+def _make_engine(legacy: bool):
+    import inspect
+
+    from repro.core.engine import Engine
+    from repro.core.hw import V5E
+
+    kw = {}
+    if "scheduler" in inspect.signature(Engine.__init__).parameters:
+        kw["scheduler"] = "legacy" if legacy else "batched"
+    elif legacy:
+        kw = {}                      # pre-refactor: everything IS legacy
+    return Engine(V5E, cache=None, **kw)
+
+
+def bench_engine(repeats: int, legacy: bool) -> float:
+    """Timeline ops scheduled per second over repeated simulate calls."""
+    from repro.cluster.devices import synthetic_module
+
+    mod = synthetic_module(ENGINE_OPS, ENGINE_ELEMS)
+    eng = _make_engine(legacy)
+    rep = eng.simulate(mod)          # warmup (parse caches, tape build)
+    n_ops = len(rep.timeline)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        eng.simulate(mod)
+    dt = time.perf_counter() - t0
+    return n_ops * repeats / dt if dt > 0 else 0.0
+
+
+def bench_cluster() -> tuple:
+    """(events/sec, events, wall seconds) on the multislice fault sweep."""
+    from repro.cluster import ClusterSim, Fleet, TableCostModel, make_policy
+    from repro.cluster.workload import synthetic_trace
+    from repro.faults import CheckpointModel, StochasticFailures
+
+    # warmup: a small run first, so import/bytecode/jit-of-nothing costs
+    # (identical for both code generations) don't land in the timed run
+    warm = synthetic_trace("synthetic:multislice", n_jobs=40, seed=7)
+    ClusterSim(
+        Fleet.from_spec(CLUSTER_DEVICES, topology=CLUSTER_TOPOLOGY),
+        TableCostModel({c.name: (0.05 * c.cost_scale, 2e9)
+                        for c in warm.classes}),
+        make_policy("locality")).run(warm)
+
+    trace = synthetic_trace("synthetic:multislice", n_jobs=CLUSTER_JOBS,
+                            seed=7)
+    table = {c.name: (0.05 * c.cost_scale, 2e9) for c in trace.classes}
+    sim = ClusterSim(
+        Fleet.from_spec(CLUSTER_DEVICES, topology=CLUSTER_TOPOLOGY),
+        TableCostModel(table), make_policy("locality"),
+        faults=StochasticFailures(mtbf_s=300.0, mttr_s=20.0, dist="weibull",
+                                  weibull_k=0.7, link_mtbf_s=600.0,
+                                  link_mttr_s=15.0, seed=3),
+        checkpoint=CheckpointModel(interval_s=10.0, base_s=0.1))
+    t0 = time.perf_counter()
+    report = sim.run(trace)
+    dt = time.perf_counter() - t0
+    events = getattr(report, "events_processed", 0) or len(report.jobs)
+    return (events / dt if dt > 0 else 0.0), events, dt
+
+
+def bench_topology(rounds: int) -> float:
+    """lower_collective calls per second, distinct payloads per round."""
+    from repro.core.hw import V5E
+    from repro.topology import Topology, lower_collective
+
+    topo = Topology.from_spec(CLUSTER_TOPOLOGY)
+    members = tuple(range(topo.num_devices))
+    payloads = [float((1 + i) << 16) for i in range(TOPOLOGY_PAYLOADS)]
+    # warmup: populate any payload-independent plan cache
+    lower_collective("all-reduce", payloads[0], members, topo, V5E)
+    n = 0
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for p in payloads:
+            lower_collective("all-reduce", p, members, topo, V5E)
+            n += 1
+    dt = time.perf_counter() - t0
+    return n / dt if dt > 0 else 0.0
+
+
+def measure(smoke: bool = False) -> dict:
+    engine_repeats = 20 if smoke else 60
+    topo_rounds = 10 if smoke else 40
+    cluster_eps, cluster_events, cluster_wall = bench_cluster()
+    return {
+        "engine_ops_per_sec": bench_engine(engine_repeats, legacy=False),
+        "engine_legacy_ops_per_sec": bench_engine(
+            max(engine_repeats // 4, 5), legacy=True),
+        "cluster_events_per_sec": cluster_eps,
+        "cluster_events": cluster_events,
+        "cluster_wall_s": cluster_wall,
+        "topology_lowerings_per_sec": bench_topology(topo_rounds),
+    }
+
+
+def _load_baseline() -> dict:
+    if BASELINE_PATH.exists():
+        return json.loads(BASELINE_PATH.read_text())
+    return {}
+
+
+def _write_baseline(data: dict) -> None:
+    BASELINE_PATH.write_text(json.dumps(data, indent=2, sort_keys=True)
+                             + "\n")
+
+
+def _scenario() -> dict:
+    return {
+        "engine": f"synthetic_module({ENGINE_OPS}, {ENGINE_ELEMS}) on v5e, "
+                  "cache=None, repeated simulate",
+        "cluster": f"{CLUSTER_DEVICES} devices {CLUSTER_TOPOLOGY}, "
+                   f"{CLUSTER_JOBS} multislice jobs, weibull faults + "
+                   "links, checkpoint every:10,base:0.1, locality",
+        "topology": f"all-reduce over {CLUSTER_TOPOLOGY}, "
+                    f"{TOPOLOGY_PAYLOADS} distinct payloads",
+    }
+
+
+METRICS = ("engine_ops_per_sec", "cluster_events_per_sec",
+           "topology_lowerings_per_sec")
+
+
+def smoke_check() -> int:
+    base = _load_baseline()
+    after = base.get("after")
+    if not after:
+        print("perf-smoke: no 'after' baseline in BENCH_perf.json — "
+              "run `make bench-perf UPDATE=1` first")
+        return 1
+    base_calib = base.get("calibration_mops") or 1.0
+    live_calib = calibrate()
+    live = measure(smoke=True)
+    failures = []
+    for m in METRICS:
+        want = after.get(m, 0.0) / base_calib
+        got = live[m] / live_calib if live_calib > 0 else 0.0
+        ratio = got / want if want > 0 else 1.0
+        status = "ok" if ratio >= 1.0 - REGRESSION_TOLERANCE else "REGRESSED"
+        print(f"perf-smoke: {m:<28s} live={live[m]:>12.0f}/s "
+              f"norm-ratio={ratio:5.2f} [{status}]")
+        if status != "ok":
+            failures.append(m)
+    if failures:
+        print(f"perf-smoke: FAILED — {failures} regressed more than "
+              f"{REGRESSION_TOLERANCE:.0%} vs BENCH_perf.json; if the "
+              "slowdown is intended, refresh with `make bench-perf "
+              "UPDATE=1` and commit the diff")
+        return 1
+    print("perf-smoke: all throughputs within tolerance")
+    return 0
+
+
+def run(emit) -> None:
+    """benchmarks/run.py section hook."""
+    res = measure(smoke=True)
+    for m in METRICS:
+        per_call_us = 1e6 / res[m] if res[m] > 0 else 0.0
+        emit(f"perf_core_{m}", per_call_us, f"{res[m]:.0f}/s")
+    emit("perf_core_cluster_wall", res["cluster_wall_s"] * 1e6,
+         f"events={res['cluster_events']}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick re-measure + fail on >30%% regression")
+    ap.add_argument("--update", action="store_true",
+                    help="write the 'after' baseline into BENCH_perf.json")
+    ap.add_argument("--record-before", action="store_true",
+                    help="write the 'before' (pre-refactor) baseline")
+    args = ap.parse_args()
+
+    if args.smoke:
+        return smoke_check()
+
+    calib = calibrate()
+    res = measure()
+    print(f"calibration: {calib:.1f} M spin-ops/s")
+    for k, v in sorted(res.items()):
+        print(f"{k:<28s} {v:>14.1f}")
+
+    if args.record_before or args.update:
+        base = _load_baseline()
+        base["scenario"] = _scenario()
+        base["calibration_mops"] = calib
+        section = "before" if args.record_before else "after"
+        base[section] = res
+        if "before" in base and "after" in base:
+            b, a = base["before"], base["after"]
+            base["speedups"] = {
+                m.split("_per_sec")[0]: (a[m] / b[m] if b.get(m) else 0.0)
+                for m in METRICS}
+        _write_baseline(base)
+        print(f"wrote {section!r} baseline to {BASELINE_PATH}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

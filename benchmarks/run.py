@@ -31,9 +31,10 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 def main() -> None:
     from benchmarks import (checkpointing, cluster_policies, conv_algos,
                             correlation, failure_sweep, kernels_bench,
-                            memory_camping, phase_analysis, power_breakdown,
-                            topology_sweep)
+                            memory_camping, perf_core, phase_analysis,
+                            power_breakdown, topology_sweep)
     sections = [
+        ("perf_core", perf_core.run),
         ("correlation", correlation.run),
         ("power", power_breakdown.run),
         ("conv_algos", conv_algos.run),

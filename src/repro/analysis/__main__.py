@@ -43,17 +43,35 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--no-topology", action="store_true",
                    help="disable the repro.topology fabric (flat analytic "
                         "ICI clock, no per-link contention)")
+    p.add_argument("--legacy-scheduler", action="store_true",
+                   help="use the retained per-op reference walk instead of "
+                        "the batched tape scheduler (results are identical; "
+                        "tests/test_fastcore.py holds them to that)")
     p.add_argument("--chrome-trace", metavar="PATH",
                    help="write chrome://tracing JSON here ('-' for stdout)")
     p.add_argument("--json", metavar="PATH",
                    help="write the full analysis JSON here ('-' for stdout)")
     p.add_argument("--width", type=int, default=72,
                    help="ASCII timeline width in columns")
+    p.add_argument("--self-profile", action="store_true",
+                   help="print wall-clock seconds per pipeline stage "
+                        "(capture/simulate/analysis/render/export) to stderr")
     return p
 
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
+
+    import time
+
+    prof: dict = {}
+    t_stage = time.perf_counter()
+
+    def mark(stage: str) -> None:
+        nonlocal t_stage
+        now = time.perf_counter()
+        prof[stage] = prof.get(stage, 0.0) + (now - t_stage)
+        t_stage = now
 
     from repro import config as C
     from repro.core import CHIPS, Simulator
@@ -92,13 +110,19 @@ def main(argv=None) -> int:
     sim = Simulator(hw=hw,
                     overlap_collectives=not args.no_overlap,
                     memory_model=not args.no_memory,
-                    topology_model=not args.no_topology)
+                    topology_model=not args.no_topology,
+                    scheduler="legacy" if args.legacy_scheduler
+                    else "batched")
     print(f"capturing {args.arch} train step "
           f"(seq={args.seq_len}, batch={args.batch}, {args.hw}) ...",
           file=sys.stderr)
+    mark("setup")
     cap = sim.capture_bundle(train_bundle(rc), name=f"{args.arch}_train")
+    mark("capture")
     rep = sim.performance(cap)
+    mark("simulate")
     ar = sim.analysis(rep, num_buckets=args.buckets)
+    mark("analysis")
 
     s = rep.summary()
     print(f"== {args.arch}: modeled step {s['total_seconds'] * 1e3:.3f} ms, "
@@ -128,6 +152,7 @@ def main(argv=None) -> int:
               f"{s['link_busy_total_seconds'] * 1e3:.3f} ms summed")
     print(f"\nbucket<->summary reconciliation: max rel error "
           f"{ar.reconcile() * 100:.3f}%")
+    mark("render")
 
     for path, payload in ((args.chrome_trace, ar.to_chrome_trace()),
                           (args.json, ar.to_json(indent=2))):
@@ -139,6 +164,15 @@ def main(argv=None) -> int:
             with open(path, "w") as f:
                 f.write(payload)
             print(f"wrote {path}", file=sys.stderr)
+    if args.self_profile:
+        mark("export")
+        total = sum(prof.values())
+        print("self-profile (wall-clock):", file=sys.stderr)
+        for stage, sec in prof.items():
+            share = sec / total * 100 if total > 0 else 0.0
+            print(f"  {stage:<8s} {sec:8.3f} s  {share:5.1f}%",
+                  file=sys.stderr)
+        print(f"  {'total':<8s} {total:8.3f} s", file=sys.stderr)
     return 0
 
 

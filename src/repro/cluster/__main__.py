@@ -68,6 +68,10 @@ def build_parser() -> argparse.ArgumentParser:
                    help="checkpoint-restore pricing: 'every:600' "
                         "(hardware-priced save/restore), "
                         "'every:10m,write:2,restore:5' (fixed costs)")
+    p.add_argument("--legacy-scheduler", action="store_true",
+                   help="price jobs with the retained per-op reference walk "
+                        "instead of the batched tape scheduler (identical "
+                        "results, slower)")
     p.add_argument("--no-elastic", action="store_true",
                    help="killed gangs wait for repairs at full size instead "
                         "of reshaping onto the surviving devices")
@@ -80,11 +84,26 @@ def build_parser() -> argparse.ArgumentParser:
                    help="write the full report JSON here ('-' for stdout)")
     p.add_argument("--width", type=int, default=72,
                    help="ASCII fleet timeline width in columns")
+    p.add_argument("--self-profile", action="store_true",
+                   help="print wall-clock seconds per simulator stage "
+                        "(setup/pricing/events/render/export) to stderr, and "
+                        "record them on ClusterReport.stage_seconds")
     return p
 
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
+
+    import time
+
+    prof: dict = {}
+    t_stage = time.perf_counter()
+
+    def mark(stage: str) -> None:
+        nonlocal t_stage
+        now = time.perf_counter()
+        prof[stage] = prof.get(stage, 0.0) + (now - t_stage)
+        t_stage = now
 
     from repro.cluster import (ClusterSim, Fleet, Trace, cost_model_for,
                                fleet_ascii, fleet_chrome_trace, make_policy,
@@ -100,7 +119,9 @@ def main(argv=None) -> int:
                                     seed=args.seed)
         else:
             trace = Trace.load(args.trace)
-        cost = cost_model_for(trace, args.cost)
+        cost = cost_model_for(
+            trace, args.cost,
+            scheduler="legacy" if args.legacy_scheduler else "batched")
         faults = parse_failure_spec(args.failures) if args.failures else None
         ckpt = parse_checkpoint_spec(args.checkpoint) \
             if args.checkpoint else None
@@ -123,7 +144,17 @@ def main(argv=None) -> int:
     sim = ClusterSim(fleet, cost, policy, cold_start_s=args.cold_start,
                      quantum_s=args.quantum, faults=faults, checkpoint=ckpt,
                      elastic=not args.no_elastic)
+    mark("setup")
+    if args.self_profile:
+        # pre-warm the memoized cost model so per-class pricing (capture +
+        # engine simulation) is measured apart from the event loop; the
+        # loop would hit the same memo either way, so results are identical
+        for jc in classes:
+            for hw in {d.hw for d in fleet.slots}:
+                cost.report(jc, hw)
+        mark("pricing")
     rep = sim.run(trace)
+    mark("events")
 
     s = rep.summary()
     print(f"== {rep.trace_name} x {rep.policy} x {rep.num_devices} devices: "
@@ -168,6 +199,7 @@ def main(argv=None) -> int:
         if worst > 0.01:
             print("TIME ACCOUNTING FAILED (> 1%)", file=sys.stderr)
             return 1
+    mark("render")
 
     for path, render in ((args.chrome_trace, lambda: fleet_chrome_trace(rep)),
                          (args.json, lambda: to_json(rep, indent=2))):
@@ -180,6 +212,16 @@ def main(argv=None) -> int:
             with open(path, "w") as f:
                 f.write(payload)
             print(f"wrote {path}", file=sys.stderr)
+    if args.self_profile:
+        mark("export")
+        rep.stage_seconds.update(prof)
+        total = sum(prof.values())
+        print("self-profile (wall-clock):", file=sys.stderr)
+        for stage, sec in prof.items():
+            share = sec / total * 100 if total > 0 else 0.0
+            print(f"  {stage:<8s} {sec:8.3f} s  {share:5.1f}%",
+                  file=sys.stderr)
+        print(f"  {'total':<8s} {total:8.3f} s", file=sys.stderr)
     return 0
 
 

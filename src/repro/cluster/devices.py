@@ -168,14 +168,22 @@ class TableCostModel(CostModel):
     def __init__(self, table: Mapping[str, Tuple[float, float]]):
         super().__init__(module_fn=lambda _name: None)
         self.table = dict(table)
+        self._memo: Dict[Tuple[str, HardwareSpec], SimReport] = {}
 
     def report(self, job_class: str, hw: HardwareSpec) -> SimReport:
-        seconds, peak = self.table[job_class]
-        return SimReport(
-            total_seconds=seconds, compute_seconds=seconds, ici_seconds=0.0,
-            exposed_ici_seconds=0.0, unit_seconds={"mxu": seconds},
-            total_flops=0.0, total_hbm_bytes=0.0, total_ici_bytes=0.0,
-            timeline=[], hw=hw, peak_hbm_bytes=peak)
+        # the report is pure in (class, chip) and never mutated by callers,
+        # so the cluster loop's thousands of cost queries share one object
+        got = self._memo.get((job_class, hw))
+        if got is None:
+            seconds, peak = self.table[job_class]
+            got = SimReport(
+                total_seconds=seconds, compute_seconds=seconds,
+                ici_seconds=0.0, exposed_ici_seconds=0.0,
+                unit_seconds={"mxu": seconds}, total_flops=0.0,
+                total_hbm_bytes=0.0, total_ici_bytes=0.0,
+                timeline=[], hw=hw, peak_hbm_bytes=peak)
+            self._memo[(job_class, hw)] = got
+        return got
 
 
 # ---------------------------------------------------------------------------

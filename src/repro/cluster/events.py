@@ -69,9 +69,13 @@ _ARRIVAL, _FINISH, _FAIL, _REPAIR = 0, 1, 2, 3
 
 def percentile(values: Sequence[float], q: float) -> float:
     """Linear-interpolation percentile (numpy's default), pure python."""
-    if not values:
+    return _percentile_sorted(sorted(values), q)
+
+
+def _percentile_sorted(xs: Sequence[float], q: float) -> float:
+    """:func:`percentile` over an ALREADY-sorted sequence (no re-sort)."""
+    if not xs:
         return 0.0
-    xs = sorted(values)
     if len(xs) == 1:
         return xs[0]
     pos = (len(xs) - 1) * q
@@ -110,7 +114,7 @@ class JobRecord:
         return self.finish_s - self.arrival_s
 
 
-@dataclass
+@dataclass(slots=True)
 class Slice:
     """One contiguous occupancy of one device (setup, restore, or run).
 
@@ -166,6 +170,13 @@ class ClusterReport:
     link_failures: int = 0
     recoveries: int = 0               # repairs completed within the run
     gang_reshapes: int = 0            # elastic shrinks applied
+    #: heap events drained by the loop (throughput denominator for
+    #: benchmarks/perf_core.py) — intentionally NOT part of summary()
+    events_processed: int = 0
+    #: wall-clock seconds per simulator stage (setup/pricing/events/render/
+    #: export), filled when the CLI runs with --self-profile; NOT part of
+    #: summary()
+    stage_seconds: Dict[str, float] = field(default_factory=dict)
     down_intervals: Dict[str, List[Tuple[float, float]]] = \
         field(default_factory=dict)
     link_down_intervals: Dict[str, List[Tuple[float, float]]] = \
@@ -203,7 +214,13 @@ class ClusterReport:
         return sum(j.queue_delay_s for j in self.jobs) / len(self.jobs)
 
     def latency_percentile(self, q: float) -> float:
-        return percentile([j.latency_s for j in self.jobs], q)
+        # sort the latency list once and reuse it for every quantile asked
+        # of this report (summary() alone asks for three)
+        cached = self.__dict__.get("_latency_sorted")
+        if cached is None or len(cached) != len(self.jobs):
+            cached = sorted(j.latency_s for j in self.jobs)
+            self.__dict__["_latency_sorted"] = cached
+        return _percentile_sorted(cached, q)
 
     @property
     def cache_hit_rate(self) -> float:
@@ -290,7 +307,11 @@ class ClusterReport:
 
     def table(self, max_rows: int = 20) -> str:
         """Per-job outcome table (worst queueing delays first)."""
-        rows = sorted(self.jobs, key=lambda j: -j.queue_delay_s)[:max_rows]
+        ranked = self.__dict__.get("_qdelay_ranked")
+        if ranked is None or len(ranked) != len(self.jobs):
+            ranked = sorted(self.jobs, key=lambda j: -j.queue_delay_s)
+            self.__dict__["_qdelay_ranked"] = ranked
+        rows = ranked[:max_rows]
         lines = [f"{'job':>9s} {'class':>14s} {'tenant':>9s} {'device':>13s} "
                  f"{'arrive':>9s} {'qdelay':>9s} {'service':>9s} "
                  f"{'latency':>9s} {'pre':>3s} {'fail':>4s}"]
@@ -391,6 +412,7 @@ class ClusterSim:
         records: Dict[str, JobRecord] = {}
         slices: List[Slice] = []
         active: Dict[str, dict] = {}          # device id -> shared gang ctx
+        gangs: Dict[int, dict] = {}           # id(ctx) -> multi-device ctxs
         device_down: Dict[str, float] = {}    # device id -> repair time
         down_iv: Dict[str, List[Tuple[float, float]]] = \
             {d.device_id: [] for d in fleet}
@@ -401,12 +423,64 @@ class ClusterSim:
         hol_bypasses = 0
         device_failures = link_failures = recoveries = gang_reshapes = 0
         arrival_seq = 0
+        events_processed = 0
+        pending_reshapes = 0          # queued jobs with reshape_pending set
+
+        # incremental policy state: on a uniform-HBM fleet every queued job
+        # fits every device (oversubscribed jobs fit by definition; the rest
+        # have peak <= max_hbm == every slot's HBM), so feasibility reduces
+        # to num_devices <= len(free) and the head-of-line probe only needs
+        # the smallest gang size currently queued — a per-size counter
+        # maintained at every queue mutation instead of a full queue rescan
+        # per event
+        uniform_fleet = all(d.hw.hbm_bytes == max_hbm for d in fleet)
+        uniform_hw = all(d.hw == ref_hw for d in fleet)
+        nd_counts: Dict[int, int] = {}
+        seq_heap: List[int] = []      # lazy min-heap over queued seqs
+        live_seqs: set = set()
+        # event-coalescing state: once a pass ends with select() == None,
+        # the policy stays blocked until the free set GROWS or the queue
+        # changes — a shrink (device failure) or a fabric-health change can
+        # never create a placement that did not exist, so those events skip
+        # the policy rescan entirely (the HoL predicate is re-answered from
+        # the O(1) gang-size counter instead)
+        sched_blocked = False
+
+        def q_add(qj: QueuedJob) -> None:
+            nonlocal sched_blocked
+            sched_blocked = False
+            queue.append(qj)
+            nd_counts[qj.num_devices] = nd_counts.get(qj.num_devices, 0) + 1
+            heapq.heappush(seq_heap, qj.seq)
+            live_seqs.add(qj.seq)
+
+        def q_remove(qj: QueuedJob) -> None:
+            nonlocal sched_blocked
+            sched_blocked = False
+            queue.remove(qj)
+            n = nd_counts[qj.num_devices] - 1
+            if n:
+                nd_counts[qj.num_devices] = n
+            else:
+                del nd_counts[qj.num_devices]
+            live_seqs.discard(qj.seq)
+
+        def queue_min_seq() -> int:
+            while seq_heap and seq_heap[0] not in live_seqs:
+                heapq.heappop(seq_heap)
+            return seq_heap[0] if seq_heap else -1
+
+        _state_bytes: Dict[str, float] = {}
 
         def state_bytes_of(job_class: str) -> float:
             """Checkpoint payload: the class's full model/optimizer-state
             footprint (the allocator's high-water mark on the reference
             chip — the same number placement shards across the gang)."""
-            return cost.peak_hbm_bytes(job_class, ref_hw)
+            got = _state_bytes.get(job_class)
+            if got is None:
+                got = _state_bytes[job_class] = \
+                    cost.peak_hbm_bytes(job_class, ref_hw)
+            return got
 
         def start_one(qj: QueuedJob, devs: Tuple[DeviceSlot, ...],
                       now: float) -> float:
@@ -414,9 +488,12 @@ class ClusterSim:
             job = qj.job
             nd = len(devs)
             # gang members step in LOCKSTEP, so the slowest chip's engine
-            # makespan prices the whole gang's step
-            base_step = max(cost.report(job.job_class, d.hw).total_seconds
-                            for d in devs)
+            # makespan prices the whole gang's step (on a uniform fleet the
+            # max over identical prices is one query)
+            base_step = cost.report(job.job_class, devs[0].hw).total_seconds \
+                if uniform_hw else \
+                max(cost.report(job.job_class, d.hw).total_seconds
+                    for d in devs)
             factor = 1.0
             if qj.base_devices and nd < qj.base_devices:
                 # elastic shrink: the same global batch over fewer devices
@@ -426,11 +503,11 @@ class ClusterSim:
                     topo, [node_id[d.device_id] for d in devs],
                     fleet.broken_links, devs[0].hw)
             per_step = base_step * factor
-            cold = [d for d in devs
-                    if self.cold_start_s > 0 and d.last_class != job.job_class]
+            cold = [d for d in devs if d.last_class != job.job_class] \
+                if self.cold_start_s > 0 else []
             setup = self.cold_start_s if cold else 0.0
-            records[job.job_id].cold_starts += len(cold)
             rec = records[job.job_id]
+            rec.cold_starts += len(cold)
             # restore: a failure sent this job back to its last durable
             # checkpoint; before re-running it pays the priced read-back
             # (+ gang re-shard) — interrupted restores pay again
@@ -438,8 +515,10 @@ class ClusterSim:
             restore_s = 0.0
             if qj.needs_restore and ckpt is not None and done > 0:
                 sb = state_bytes_of(job.job_class)
-                restore_s = max(ckpt.restore_seconds(sb, d.hw, gang=nd)
-                                for d in devs)
+                restore_s = ckpt.restore_seconds(sb, devs[0].hw, gang=nd) \
+                    if uniform_hw else \
+                    max(ckpt.restore_seconds(sb, d.hw, gang=nd)
+                        for d in devs)
                 rec.restores += 1
             qj.needs_restore = False
             # checkpoint cadence inside this slice: k steps per save, each
@@ -448,7 +527,8 @@ class ClusterSim:
             if ckpt is not None and ckpt.interval_s > 0 and per_step > 0:
                 k = ckpt.steps_per_checkpoint(per_step)
                 sb = state_bytes_of(job.job_class)
-                w = max(ckpt.save_seconds(sb / nd, d.hw) for d in devs)
+                w = ckpt.save_seconds(sb / nd, devs[0].hw) if uniform_hw \
+                    else max(ckpt.save_seconds(sb / nd, d.hw) for d in devs)
             steps = qj.remaining_steps
             if self.quantum_s is not None and per_step > 0:
                 steps = min(steps, max(int(self.quantum_s / per_step), 1))
@@ -461,7 +541,9 @@ class ClusterSim:
             else:
                 n_ck = 0
             run_s = steps * per_step + n_ck * w
-            t0 = max([now] + [d.free_at for d in devs])
+            # devs come from fleet.free(now), so every free_at <= now and
+            # the legacy max(now, *free_at) is exactly now
+            t0 = now
             run_t0 = t0 + setup + restore_s
             group = tuple(d.device_id for d in devs) if nd > 1 else ()
             ctx = {"qj": qj, "devs": devs, "t0": run_t0,
@@ -488,6 +570,8 @@ class ClusterSim:
                 d.free_at = run_t0 + run_s
                 d.last_class = job.job_class
                 active[d.device_id] = ctx
+            if nd > 1:
+                gangs[id(ctx)] = ctx      # link-failure kill scan registry
             if qj.first_start_s is None:
                 qj.first_start_s = t0
                 rec.start_s = t0
@@ -508,7 +592,7 @@ class ClusterSim:
         def kill_gang(ctx: dict, now: float, failed_ids=()) -> None:
             """A fault killed this running gang: truncate its occupancy to
             ``now``, roll the job back to its last durable point, requeue."""
-            nonlocal arrival_seq
+            nonlocal arrival_seq, pending_reshapes
             qj: QueuedJob = ctx["qj"]
             devs = ctx["devs"]
             qj.epoch += 1                 # invalidate the pending FINISH
@@ -548,6 +632,7 @@ class ClusterSim:
             rec.lost_work_s += lost
             rec.service_s -= ctx["finish"] - max(now, ctx["t0"])
             qj.remaining_steps += steps - committed
+            gangs.pop(id(ctx), None)
             for d in devs:
                 active.pop(d.device_id, None)
                 if d.device_id not in failed_ids:
@@ -556,14 +641,19 @@ class ClusterSim:
             arrival_seq += 1
             qj.service_s = predicted_service(qj)
             qj.reshape_pending = self.elastic and qj.num_devices > 1
-            queue.append(qj)
+            if qj.reshape_pending:
+                pending_reshapes += 1
+            q_add(qj)
 
         def reshape_pass() -> None:
             """Elastic gangs killed by a failure reshape onto the surviving
             device count at their first post-failure scheduling pass (after
             ALL same-timestamp failures have drained, so simultaneous
             multi-device outages are seen at once)."""
-            nonlocal gang_reshapes
+            nonlocal gang_reshapes, pending_reshapes, sched_blocked
+            if not pending_reshapes:
+                return                # nothing queued was failure-killed
+            sched_blocked = False     # gang shapes may shrink below
             up = len(fleet) - len(device_down)
             for qj in queue:
                 if not qj.reshape_pending:
@@ -572,6 +662,7 @@ class ClusterSim:
                 if up <= 0 or up >= qj.num_devices:
                     continue
                 full_peak = qj.peak_hbm_bytes * qj.num_devices
+                old_nd = qj.num_devices
                 qj.num_devices = max(up, 1)
                 qj.peak_hbm_bytes = full_peak / qj.num_devices
                 qj.oversubscribed = (qj.oversubscribed
@@ -579,38 +670,81 @@ class ClusterSim:
                 qj.service_s = predicted_service(qj)
                 gang_reshapes += 1
                 records[qj.job.job_id].reshapes += 1
+                n = nd_counts[old_nd] - 1
+                if n:
+                    nd_counts[old_nd] = n
+                else:
+                    del nd_counts[old_nd]
+                nd_counts[qj.num_devices] = \
+                    nd_counts.get(qj.num_devices, 0) + 1
+            pending_reshapes = 0      # every flag was consumed above
+
+        def hol_check(free) -> None:
+            # head-of-line diagnosis: the head cannot start but a
+            # younger queued job could — the FIFO pathology the
+            # MLaaS traces blame for short-job delays.  Feasibility
+            # per job is the O(log n) capacity bisect, not a
+            # materialized first-fit tuple.
+            # (select() returning None means the head itself cannot
+            # fit, so probing the WHOLE queue equals probing
+            # queue[1:] — which lets the uniform-fleet path answer
+            # from the incremental gang-size counter alone)
+            nonlocal hol_events
+            head = queue[0]
+            if uniform_fleet:
+                blocked_could = min(nd_counts) <= len(free)
+            else:
+                hbm_sorted = self.policy.free_hbm_sorted(free)
+                blocked_could = any(
+                    self.policy.can_fit(qj, hbm_sorted)
+                    for qj in queue[1:])
+            if blocked_could:
+                hol_events += 1
+                if head.job.job_id not in hol_blocked:
+                    hol_blocked.append(head.job.job_id)
 
         def schedule_pass(now: float) -> None:
-            nonlocal hol_events, hol_bypasses
-            reshape_pass()
+            nonlocal hol_events, hol_bypasses, sched_blocked
+            if pending_reshapes:
+                reshape_pass()
+            if sched_blocked:
+                # coalesced replay: since the blocking pass the free set
+                # never grew and the queue never changed (those events clear
+                # the flag), so select() would return None again — a shrink
+                # can only remove placements.  Only the head-of-line
+                # accounting depends on the current free set, so re-answer
+                # it from the O(1)/O(log n) predicate and skip the policy.
+                if queue:
+                    free = fleet.free(now)
+                    if free:
+                        hol_check(free)
+                return
             while queue:
                 free = fleet.free(now)
                 if not free:
+                    sched_blocked = True
                     return
                 sel = self.policy.select(queue, free, now)
                 if sel is None:
-                    # head-of-line diagnosis: the head cannot start but a
-                    # younger queued job could — the FIFO pathology the
-                    # MLaaS traces blame for short-job delays
-                    head = queue[0]
-                    if any(self.policy._first_fit(qj, free) is not None
-                           for qj in queue[1:]):
-                        hol_events += 1
-                        if head.job.job_id not in hol_blocked:
-                            hol_blocked.append(head.job.job_id)
+                    hol_check(free)
+                    sched_blocked = True
                     return
                 qj, devs = sel
-                if any(other.seq < qj.seq for other in queue
-                       if other is not qj):
+                # seqs are unique, so "an older job was jumped" is just a
+                # min-seq comparison (tracked incrementally, not rescanned)
+                if queue_min_seq() < qj.seq:
                     hol_bypasses += 1
-                queue.remove(qj)
+                q_remove(qj)
                 start_one(qj, devs, now)
+            sched_blocked = True          # empty queue: next q_add resets
 
+        heappop = heapq.heappop               # hot-loop local binding
         while heap:
             now = heap[0][0]
             # drain every event at `now` before making placement decisions
             while heap and heap[0][0] == now:
-                _t, _s, kind, payload = heapq.heappop(heap)
+                _t, _s, kind, payload = heappop(heap)
+                events_processed += 1
                 if kind == _ARRIVAL:
                     job: Job = payload
                     # gangs larger than the fleet are clamped (and flagged):
@@ -627,7 +761,7 @@ class ClusterSim:
                         arrival_s=job.arrival_s, start_s=job.arrival_s,
                         finish_s=job.arrival_s, service_s=0.0,
                         num_steps=job.num_steps, oversubscribed=over)
-                    queue.append(QueuedJob(
+                    q_add(QueuedJob(
                         job, arrival_seq,
                         service_s=cost.service_seconds(job, ref_hw),
                         peak_hbm_bytes=peak,
@@ -638,6 +772,11 @@ class ClusterSim:
                     qj, devs, epoch = payload
                     if epoch != qj.epoch:
                         continue          # gang was killed: stale event
+                    sched_blocked = False     # the free set just grew
+                    if len(devs) > 1:
+                        ctx = active.get(devs[0].device_id)
+                        if ctx is not None:
+                            gangs.pop(id(ctx), None)
                     for dev in devs:
                         dev.jobs_done += 1
                         active.pop(dev.device_id, None)
@@ -652,7 +791,7 @@ class ClusterSim:
                         qj.seq = arrival_seq
                         arrival_seq += 1
                         qj.service_s = predicted_service(qj)
-                        queue.append(qj)
+                        q_add(qj)
                     else:
                         records[qj.job.job_id].finish_s = now
                         finished += 1
@@ -674,10 +813,11 @@ class ClusterSim:
                         link_iv.setdefault(key, []).append((now, rep_t))
                         fleet.broken_links.add(pair)
                         # kill every gang whose collectives cross the link
-                        for ctx in list({id(c): c for c
-                                         in active.values()}.values()):
+                        # (the registry holds exactly the multi-device ctxs,
+                        # so no dedup scan over per-device entries)
+                        for ctx in list(gangs.values()):
                             gang = ctx["devs"]
-                            if len(gang) <= 1 or topo is None:
+                            if topo is None:
                                 continue
                             inside = topo.internal_links(
                                 [pos_of[d.device_id] for d in gang])
@@ -691,22 +831,28 @@ class ClusterSim:
                     recoveries += 1
                     if tkind == DEVICE:
                         device_down.pop(key, None)
+                        sched_blocked = False     # the free set just grew
                     else:
                         fleet.broken_links.discard(pair)
                     if finished < total_jobs:
                         push_outage(tkind, key, pair)
             schedule_pass(now)
 
-        # degenerate truncations (killed before any run time) leave
-        # zero-width slices behind; drop them from the report
-        slices = [s for s in slices if s.t1 > s.t0 or s.steps > 0]
-        makespan = max((s.t1 for s in slices), default=0.0)
-        # per-device aggregates from the (possibly truncated) slices — the
-        # single source of truth once failures can rewrite history
+        # one fused pass over the tape: drop the zero-width slices that
+        # degenerate truncations (killed before any run time) leave behind,
+        # and compute every per-device/per-kind aggregate — the single
+        # source of truth once failures can rewrite history
         busy = {d.device_id: 0.0 for d in fleet}
         setup = dict(busy)
         ckpt_total = restore_total = lost_total = 0.0
+        makespan = 0.0
+        kept: List[Slice] = []
         for s in slices:
+            if not (s.t1 > s.t0 or s.steps > 0):
+                continue
+            kept.append(s)
+            if s.t1 > makespan:
+                makespan = s.t1
             if s.kind == "run":
                 busy[s.device_id] += (s.t1 - s.t0) - s.ckpt_s - s.lost_s
                 ckpt_total += s.ckpt_s
@@ -715,6 +861,7 @@ class ClusterSim:
                 setup[s.device_id] += s.t1 - s.t0
             elif s.kind == "restore":
                 restore_total += s.t1 - s.t0
+        slices = kept
         for d in fleet:
             d.busy_seconds = busy[d.device_id]
             d.setup_seconds = setup[d.device_id]
@@ -724,11 +871,21 @@ class ClusterSim:
         # price), scaled by the slice's degradation factor — must match the
         # loop's accumulated useful busy time
         hw_of = {d.device_id: d.hw for d in fleet}
-        engine_service = sum(
-            s.steps * s.price_factor
-            * max(cost.report(s.job_class, hw_of[d]).total_seconds
-                  for d in (s.group or (s.device_id,)))
-            for s in slices if s.kind == "run")
+        price_memo: Dict[tuple, float] = {}
+        engine_service = 0.0
+        for s in slices:
+            if s.kind != "run":
+                continue
+            # the inner max is pure in (class, gang): memoize it so the
+            # reconciliation sweep prices each distinct placement once
+            # instead of re-querying the cost model per slice
+            pkey = (s.job_class, s.group or s.device_id)
+            p = price_memo.get(pkey)
+            if p is None:
+                p = max(cost.report(s.job_class, hw_of[d]).total_seconds
+                        for d in (s.group or (s.device_id,)))
+                price_memo[pkey] = p
+            engine_service += s.steps * s.price_factor * p
         hits, misses = cost.cache_stats()
         ordered = [records[j.job_id] for j in trace.jobs]
         return ClusterReport(
@@ -754,6 +911,7 @@ class ClusterSim:
             link_failures=link_failures,
             recoveries=recoveries,
             gang_reshapes=gang_reshapes,
+            events_processed=events_processed,
             down_intervals={d: iv for d, iv in down_iv.items() if iv},
             link_down_intervals=link_iv,
             failure_marks=marks,

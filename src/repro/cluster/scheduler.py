@@ -40,8 +40,9 @@ Policies:
 """
 from __future__ import annotations
 
+from bisect import bisect_left
 from dataclasses import dataclass
-from typing import Dict, Optional, Sequence, Tuple, Type
+from typing import Dict, List, Optional, Sequence, Tuple, Type
 
 from repro.cluster.devices import DeviceSlot, Fleet
 from repro.cluster.workload import Job
@@ -87,6 +88,8 @@ class Policy:
         self.topology = fleet.topology
         self.fleet = fleet
         self._node_of = {d.device_id: i for i, d in enumerate(fleet.slots)}
+        self._slice_memo: Dict[int, Tuple[Tuple[int, ...], ...]] = {}
+        self._min_hbm = min(d.hw.hbm_bytes for d in fleet.slots)
 
     def select(self, queue: Sequence[QueuedJob], free: Sequence[DeviceSlot],
                now: float
@@ -107,6 +110,27 @@ class Policy:
             return None
         return tuple(picked)
 
+    @staticmethod
+    def free_hbm_sorted(free: Sequence[DeviceSlot]) -> List[float]:
+        """Sorted HBM capacities of the free set — the structure behind
+        :meth:`can_fit`'s O(log n) feasibility test."""
+        return sorted(d.hw.hbm_bytes for d in free)
+
+    @staticmethod
+    def can_fit(qj: QueuedJob, hbm_sorted: Sequence[float]) -> bool:
+        """Whether ``_first_fit(qj, free)`` would succeed, in O(log n).
+
+        ``qj.fits`` is a pure HBM-capacity threshold, so the number of
+        fitting free devices is the count of capacities ``>= peak`` — a
+        bisect over the sorted capacities, equivalent to (but much cheaper
+        than) materializing the first-fit device tuple per queued job.
+        """
+        n = len(hbm_sorted)
+        if qj.oversubscribed:
+            return n >= qj.num_devices
+        return n - bisect_left(hbm_sorted, qj.peak_hbm_bytes) \
+            >= qj.num_devices
+
 
 class FIFO(Policy):
     """Strict arrival order: only the queue head may start."""
@@ -126,15 +150,23 @@ class SJF(Policy):
     name = "sjf"
 
     def select(self, queue, free, now):
+        # feasibility is an O(log n) bisect per queued job (see can_fit), so
+        # one pass finds the min-(service, seq) fitting job without building
+        # a candidate device tuple per entry; the winner's tuple is built
+        # once at the end — identical selection to the full rescan
+        if not queue or not free:
+            return None
+        hbm_sorted = self.free_hbm_sorted(free)
         best = None
         for qj in queue:
-            devs = self._first_fit(qj, free)
-            if devs is None:
+            if best is not None and \
+                    (qj.service_s, qj.seq) >= (best.service_s, best.seq):
                 continue
-            if best is None or (qj.service_s, qj.seq) < (best[0].service_s,
-                                                         best[0].seq):
-                best = (qj, devs)
-        return best
+            if self.can_fit(qj, hbm_sorted):
+                best = qj
+        if best is None:
+            return None
+        return (best, self._first_fit(best, free))
 
 
 class BestFitHBM(Policy):
@@ -149,14 +181,23 @@ class BestFitHBM(Policy):
     name = "best-fit-hbm"
 
     def select(self, queue, free, now):
+        # sort the free set by HBM once; each job's fitting devices are then
+        # a suffix of that order (fits() is a capacity threshold, and sort
+        # stability makes filter-then-sort == sort-then-filter), so the old
+        # per-job sort collapses to one bisect + slice
+        if not queue or not free:
+            return None
+        free_sorted = sorted(free, key=lambda d: d.hw.hbm_bytes)
+        hbm_vals = [d.hw.hbm_bytes for d in free_sorted]
+        n = len(free_sorted)
         best = None
         best_key = None
         for qj in queue:
-            fitting = sorted((d for d in free if qj.fits(d)),
-                             key=lambda d: d.hw.hbm_bytes)
-            if len(fitting) < qj.num_devices:
+            i = 0 if qj.oversubscribed \
+                else bisect_left(hbm_vals, qj.peak_hbm_bytes)
+            if n - i < qj.num_devices:
                 continue
-            devs = tuple(fitting[:qj.num_devices])
+            devs = tuple(free_sorted[i:i + qj.num_devices])
             slack = sum(d.hw.hbm_bytes - qj.peak_hbm_bytes for d in devs)
             key = (slack, qj.seq)
             if best_key is None or key < best_key:
@@ -195,14 +236,29 @@ class Locality(Policy):
 
     def _best_slice(self, qj: QueuedJob, free: Sequence[DeviceSlot]
                     ) -> Optional[Tuple[DeviceSlot, ...]]:
-        if self.topology is None:
+        if self.topology is None or len(free) < qj.num_devices:
+            # no candidate slice can be all-free; fall through to the same
+            # first-fit fallback the exhausted walk would reach
             return self._first_fit(qj, free)
-        free_at = {self._node_of[d.device_id]: d for d in free
-                   if qj.fits(d) and d.device_id in self._node_of}
+        node_of = self._node_of
+        if qj.oversubscribed or \
+                qj.peak_hbm_bytes <= getattr(self, "_min_hbm", 0):
+            # fits every chip in the fleet: skip the per-device fit filter
+            free_at = {node_of[d.device_id]: d for d in free
+                       if d.device_id in node_of}
+        else:
+            free_at = {node_of[d.device_id]: d for d in free
+                       if qj.fits(d) and d.device_id in node_of}
+        if len(free_at) < qj.num_devices:
+            return self._first_fit(qj, free)
+        free_mask = 0
+        for pos in free_at:
+            free_mask |= 1 << pos
         broken = getattr(self.fleet, "broken_links", None)
         degraded = None
-        for cand in self.topology.sub_slices(qj.num_devices):
-            if all(pos in free_at for pos in cand):
+        for mask, cand in self._slices(qj.num_devices):
+            # all-free test as one int op over position bitmasks
+            if mask & free_mask == mask:
                 if broken and self.topology.internal_links(cand) & broken:
                     # crosses a failed link: usable, but keep looking for
                     # an intact block first (its collectives run dilated)
@@ -213,6 +269,21 @@ class Locality(Policy):
         if degraded is not None:
             return degraded
         return self._first_fit(qj, free)
+
+    def _slices(self, k: int) -> Tuple[Tuple[int, Tuple[int, ...]], ...]:
+        """Per-run memo of the topology's ranked sub-slices, each paired
+        with its position bitmask (the public accessor re-copies its cached
+        list on every call, and a bitmask subset test beats a frozenset
+        one)."""
+        memo = getattr(self, "_slice_memo", None)
+        if memo is None:
+            memo = self._slice_memo = {}
+        got = memo.get(k)
+        if got is None:
+            got = memo[k] = tuple(
+                (sum(1 << p for p in cand), cand)
+                for cand in self.topology.sub_slices(k))
+        return got
 
 
 POLICIES: Dict[str, Type[Policy]] = {

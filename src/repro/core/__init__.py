@@ -34,11 +34,12 @@ class Simulator:
 
     def __init__(self, hw: HardwareSpec = V5E, overlap_collectives: bool = True,
                  num_compute_streams: int = 1, memory_model: bool = True,
-                 topology_model: bool = True):
+                 topology_model: bool = True, scheduler: str = "batched"):
         self.hw = hw
         self.engine = Engine(hw, overlap_collectives, num_compute_streams,
                              memory_model=memory_model,
-                             topology_model=topology_model)
+                             topology_model=topology_model,
+                             scheduler=scheduler)
 
     def capture(self, fn, *abstract_args, **kw) -> Captured:
         return capture(fn, *abstract_args, **kw)

@@ -268,6 +268,14 @@ class SimulationCache:
 
     Cached reports are returned *shared* — callers must treat them as
     read-only.  ``hits``/``misses`` feed the cluster's hit-rate counter.
+
+    The key decomposes into (module, hw, knobs, faults) parts so the
+    batched scheduler's *delta re-simulation* can tell which family a
+    change lives in: the cache also registers each recorded
+    :class:`~repro.core.fastsched.ModuleTape` under its ``(module, hw,
+    knobs)`` family, and an engine differing ONLY in the faults part (a
+    broken-link set, a checkpoint/faults key) reprices the donor tape's
+    collective steps instead of re-walking the module.
     """
 
     def __init__(self):
@@ -275,13 +283,45 @@ class SimulationCache:
         self.misses = 0
         self._reports: Dict[tuple, SimReport] = {}
         self._modules: Dict[int, SimModule] = {}   # pin ids (see docstring)
+        #: tape family -> (faults part, ModuleTape): donor tapes for the
+        #: batched scheduler's cross-engine delta re-simulation
+        self._tapes: Dict[tuple, tuple] = {}
 
     @staticmethod
     def key(engine: "Engine", mod: SimModule,
             window: Optional[Tuple[int, int]]) -> tuple:
-        return (id(mod), window, engine.hw, engine.overlap,
-                engine.num_compute_streams, engine.memory_model,
-                engine.topology_model)
+        return ((id(mod), window), engine.hw,
+                SimulationCache.knobs_part(engine),
+                SimulationCache.faults_part(engine))
+
+    @staticmethod
+    def knobs_part(engine: "Engine") -> tuple:
+        """Schedule-shaping engine knobs (everything but hw and faults)."""
+        return (engine.overlap, engine.num_compute_streams,
+                engine.memory_model, engine.topology_model)
+
+    @staticmethod
+    def faults_part(engine: "Engine") -> tuple:
+        """Faults-layer inputs that change pricing: the degraded-fabric
+        broken-link set and the opaque ``faults_key`` (e.g. a checkpoint
+        spec) — previously MISSING from the key, which aliased reports
+        across fault scenarios."""
+        broken = engine.broken_links
+        return (tuple(sorted(broken)) if broken else None, engine.faults_key)
+
+    @staticmethod
+    def tape_family(engine: "Engine", mod: SimModule) -> tuple:
+        """Tape-sharing granularity: window and faults excluded (a tape is
+        window-independent; a faults-only change is repriceable)."""
+        return (id(mod), engine.hw, SimulationCache.knobs_part(engine))
+
+    def lookup_tape(self, family: tuple) -> Optional[tuple]:
+        """``(faults_part, tape)`` recorded for this family, if any."""
+        return self._tapes.get(family)
+
+    def store_tape(self, family: tuple, faults_part: tuple,
+                   tape: Any) -> None:
+        self._tapes[family] = (faults_part, tape)
 
     def lookup(self, key: tuple) -> Optional[SimReport]:
         rep = self._reports.get(key)
@@ -319,26 +359,54 @@ class Engine:
     memoizes whole ``simulate`` calls on identical (module, window, spec)
     inputs — the cluster simulator's per-job cost model shares one across
     the fleet.
+
+    ``scheduler`` selects the simulation core: ``"batched"`` (default)
+    records the first walk of each module onto a
+    :class:`~repro.core.fastsched.ModuleTape` and replays the tape for
+    every later simulation (bit-exact, several times faster — see
+    ``docs/ARCHITECTURE.md``); ``"legacy"`` re-walks the module every
+    call (the reference implementation the equivalence suite compares
+    against).
+
+    ``broken_links`` (undirected node-id pairs) prices collectives on the
+    DEGRADED fabric — lowering routes around the failed links.
+    ``faults_key`` is an opaque hashable folded into the cache key for any
+    other faults-layer input that changes effective cost (e.g. a
+    checkpoint spec); both live in the key's faults part, so fault
+    scenarios never alias each other's cached reports.
     """
 
     def __init__(self, hw: HardwareSpec = V5E, overlap_collectives: bool = True,
                  num_compute_streams: int = 1, memory_model: bool = True,
                  cache: Optional[SimulationCache] = None,
-                 topology_model: bool = True):
+                 topology_model: bool = True, scheduler: str = "batched",
+                 broken_links: Optional[Any] = None,
+                 faults_key: Optional[Any] = None):
         if num_compute_streams < 1:
             raise ValueError(
                 f"num_compute_streams must be >= 1, got {num_compute_streams}")
+        if scheduler not in ("batched", "legacy"):
+            raise KeyError(f"unknown scheduler {scheduler!r} "
+                           "(expected 'batched' or 'legacy')")
         self.hw = hw
         self.overlap = overlap_collectives
         self.num_compute_streams = num_compute_streams
         self.memory_model = memory_model
         self.topology_model = topology_model
+        self.scheduler = scheduler
+        self.broken_links = frozenset(broken_links) if broken_links else None
+        self.faults_key = faults_key
         self.cache = cache
         # one FabricModel per engine (hw is fixed), so its collective-
         # lowering memo survives across simulate() calls — and a malformed
         # hw.ici_topology spec fails HERE, before any capture work
         from repro.topology import FabricModel
-        self.fabric = FabricModel(hw) if topology_model else None
+        self.fabric = FabricModel(hw, broken=self.broken_links) \
+            if topology_model else None
+        #: per-engine replay tapes keyed by module identity (modules pinned
+        #: alongside so ids cannot be recycled while a tape references one)
+        self._tapes: Dict[int, Any] = {}
+        self._tape_mods: Dict[int, SimModule] = {}
 
     # ------------------------------------------------------------------
     def simulate(self, mod: SimModule, window: Optional[Tuple[int, int]] = None
@@ -348,19 +416,81 @@ class Engine:
         analytically — the op-level analogue of the paper's CTA checkpoint.
         Fast-forwarded ops flow through the same scheduler (they advance the
         same resource clocks and are fully accounted), they just carry no
-        timeline entry."""
+        timeline entry.
+
+        Dispatch order (cheapest first): cached report -> tape replay
+        (this engine has, or can borrow/reprice, a recorded tape for the
+        module) -> full recording walk.  The ``"legacy"`` scheduler always
+        takes the full walk."""
         if mod.entry is None:
             raise ValueError("module has no entry computation")
 
-        if self.cache is not None:
+        cache = self.cache
+        if cache is not None:
             cache_key = SimulationCache.key(self, mod, window)
-            cached = self.cache.lookup(cache_key)
+            cached = cache.lookup(cache_key)
             if cached is not None:
                 return cached
 
+        if self.scheduler == "legacy":
+            report = self._walk_simulate(mod, window, record=False)[0]
+            if cache is not None:
+                cache.store(cache_key, mod, report)
+            return report
+
+        from repro.core import fastsched
+        tape = self._tapes.get(id(mod))
+        family = None
+        if tape is None and cache is not None:
+            # borrow a tape recorded by another engine of the same family;
+            # a faults-part mismatch means only the fabric state differs,
+            # which the ici delta tier reprices without re-walking
+            family = SimulationCache.tape_family(self, mod)
+            donor = cache.lookup_tape(family)
+            if donor is not None:
+                donor_faults, donor_tape = donor
+                if donor_faults == SimulationCache.faults_part(self):
+                    tape = donor_tape
+                else:
+                    tape = fastsched.reprice_ici(donor_tape, mod, self.hw,
+                                                 self.fabric)
+                if tape is not None:
+                    self._tapes[id(mod)] = tape
+                    self._tape_mods[id(mod)] = mod
+        if tape is not None:
+            report = fastsched.replay(tape, self, window)
+        else:
+            report, tape = self._walk_simulate(mod, window, record=True)
+            self._tapes[id(mod)] = tape
+            self._tape_mods[id(mod)] = mod
+            if cache is not None:
+                if family is None:
+                    family = SimulationCache.tape_family(self, mod)
+                cache.store_tape(family, SimulationCache.faults_part(self),
+                                 tape)
+        if cache is not None:
+            cache.store(cache_key, mod, report)
+        return report
+
+    def _walk_simulate(self, mod: SimModule,
+                       window: Optional[Tuple[int, int]],
+                       record: bool) -> Tuple[SimReport, Optional[Any]]:
+        """The reference dataflow walk (the pre-refactor ``simulate`` body).
+
+        With ``record=True`` the walk additionally freezes its structure
+        and pricing decisions onto a :class:`~repro.core.fastsched.
+        ModuleTape` (returned as the second element) so later simulations
+        replay instead of re-walking; the recording hooks never influence
+        the walk's own arithmetic."""
         from repro.memory import MemoryModel
         mem = MemoryModel(mod, self.hw) if self.memory_model else None
         fabric = self.fabric
+        rec = None
+        if record:
+            from repro.core.fastsched import (
+                CALL, EXEC, SKIP, WHILE, ModuleTape, TapeRecorder,
+            )
+            rec = TapeRecorder()
 
         timeline: List[TimelineEntry] = []
         unit_seconds: Dict[str, float] = {}
@@ -478,6 +608,12 @@ class Engine:
             # must not overwrite the first invocation's crit-path nodes
             inv = state["ninv"]
             state["ninv"] += 1
+            # recording: operand slots are bound BEFORE this op publishes its
+            # own ready value, and every publish allocates a fresh slot, so
+            # replay resolves re-invoked computations to the same values the
+            # dict lookups saw here
+            steps = [] if rec is not None else None
+            last_slots = [] if rec is not None else None
             last: Tuple[float, Optional[str]] = (t_base, base_pred)
             for op in comp.ops:
                 key = (comp_name, op.name)
@@ -485,15 +621,27 @@ class Engine:
                     # linear-scan allocator step (aliases included, so the
                     # per-invocation live ranges line up with program order)
                     mem.visit(inv, comp, op)
+                if rec is not None:
+                    deps = rec.deps(comp_name, op.operands)
                 if op.opcode in SKIP_OPS:
                     # zero-cost dataflow plumbing: propagate readiness
                     ready[key] = dep_ready(comp_name, op, t_base, base_pred)
+                    if rec is not None:
+                        steps.append((SKIP, rec.slot(key), deps))
                     continue
                 if op.opcode == "while":
                     ready[key] = run_while(comp_name, op, scale, t_base,
                                            base_pred)
                     if mem is not None:
                         mem.after_subcomputation(inv, op)
+                    if rec is not None:
+                        out = rec.slot(key)
+                        pw = rec.pending_while
+                        if pw is None:     # body-less while degenerates to
+                            steps.append((SKIP, out, deps))  # dep propagation
+                        else:
+                            steps.append((WHILE, out, deps) + pw)
+                        last_slots.append(out)
                     last = max(last, ready[key], key=lambda r: r[0])
                     continue
                 if op.opcode == "call":
@@ -503,6 +651,10 @@ class Engine:
                         ready[key] = run_comp(c.group(1), scale, d, dpred)
                         if mem is not None:
                             mem.after_subcomputation(inv, op)
+                        if rec is not None:
+                            out = rec.slot(key)
+                            steps.append((CALL, out, deps) + rec.last_frame)
+                            last_slots.append(out)
                         last = max(last, ready[key], key=lambda r: r[0])
                         continue
                 state["idx"] += 1
@@ -544,11 +696,25 @@ class Engine:
                     # release their visit deferred (no-op for other ops)
                     mem.after_subcomputation(inv, op)
                 ready[key] = (nodes[node_id].finish, node_id)
+                if rec is not None:
+                    out = rec.slot(key)
+                    steps.append((EXEC, out, deps, state["idx"], node_id, ot,
+                                  scale, chans, links,
+                                  mo.channel_bytes if mo else None,
+                                  float(mo.spill_bytes) if mo else 0.0,
+                                  comp_name, op))
+                    last_slots.append(out)
                 last = max(last, ready[key], key=lambda r: r[0])
             if mem is not None:
                 mem.close_invocation(inv)
             if comp.root is not None and (comp_name, comp.root) in ready:
+                if rec is not None:
+                    rec.last_frame = (steps,
+                                      rec.slot_of[(comp_name, comp.root)],
+                                      last_slots)
                 return ready[(comp_name, comp.root)]
+            if rec is not None:
+                rec.last_frame = (steps, None, last_slots)
             return last
 
         def run_while(comp_name: str, op: SimOp, scale: float, t_base: float,
@@ -566,6 +732,8 @@ class Engine:
             trip = mod.trip_count(op)
             b = _BODY_RE.search(op.raw)
             if not (b and b.group(1) in mod.computations):
+                if rec is not None:
+                    rec.pending_while = None
                 return d, dpred
             t0, pred0 = max(
                 [(d, dpred)]
@@ -576,6 +744,8 @@ class Engine:
             snap_units = dict(unit_free)
             snap_streams = list(streams)
             t1, rpred = run_comp(b.group(1), scale * trip, t0, pred0)
+            if rec is not None:
+                rec.pending_while = (trip,) + rec.last_frame
             # iterations serialize on the loop-carried dependence, so the
             # body's resources stay busy for the remaining trips
             # .get(..., 0.0): link clocks are created lazily, so a collective
@@ -629,9 +799,16 @@ class Engine:
             memory=memmap,
             link_busy_seconds=link_busy,
         )
-        if self.cache is not None:
-            self.cache.store(cache_key, mod, report)
-        return report
+        tape = None
+        if rec is not None:
+            entry_steps, entry_root, entry_lasts = rec.last_frame
+            tape = ModuleTape(
+                entry_steps, entry_root, entry_lasts, rec.n,
+                has_mem=mem is not None,
+                mem_peak=float(memmap.peak_live_bytes) if memmap else 0.0,
+                mem_channel_busy=list(mem.channel_busy) if mem else (),
+                memmap=memmap)
+        return report, tape
 
     # ------------------------------------------------------------------
     @staticmethod

@@ -185,6 +185,16 @@ class SimModule:
     def __init__(self):
         self.computations: Dict[str, Computation] = {}
         self.entry: Optional[str] = None
+        # per-op cost memos, keyed by op identity (ops are parsed once and
+        # never mutated, so every cost function below is pure in the op) —
+        # the engine's recording walk and the cluster's re-simulations hit
+        # the same ops thousands of times.  Callers treat the returned
+        # dicts as read-only (they already did: one object was always
+        # shared per call site via the engine's report cache).
+        self._flops_memo: Dict[int, Dict[str, float]] = {}
+        self._hbm_memo: Dict[int, int] = {}
+        self._coll_memo: Dict[int, Optional[Dict[str, Any]]] = {}
+        self._trip_memo: Dict[int, int] = {}
 
     # -- helpers --------------------------------------------------------------
     def comp(self, name: str) -> Computation:
@@ -197,19 +207,34 @@ class SimModule:
     def trip_count(self, while_op: SimOp) -> int:
         """Heuristic trip count: the largest integer constant in the while's
         condition computation (canonical scan bounds: i < N)."""
-        m = _COND_RE.search(while_op.raw)
-        if not m or m.group(1) not in self.computations:
-            return 1
-        cond = self.computations[m.group(1)]
+        got = self._trip_memo.get(id(while_op))
+        if got is not None:
+            return got
         best = 1
-        for op in cond.ops:
-            for c in _CONST_INT_RE.finditer(op.raw):
-                best = max(best, int(c.group(1)))
+        m = _COND_RE.search(while_op.raw)
+        if m and m.group(1) in self.computations:
+            cond = self.computations[m.group(1)]
+            for op in cond.ops:
+                for c in _CONST_INT_RE.finditer(op.raw):
+                    best = max(best, int(c.group(1)))
+        self._trip_memo[id(while_op)] = best
         return best
 
     # -- per-op analytic cost --------------------------------------------------
     def op_flops(self, comp: Computation, op: SimOp) -> Dict[str, float]:
-        """Returns {mxu: dot/conv FLOPs, vpu: elementwise, trans: transcendental}."""
+        """Returns {mxu: dot/conv FLOPs, vpu: elementwise, trans: transcendental}.
+
+        Memoized per op (read-only result); fusion recursion memoizes the
+        interior ops too.
+        """
+        got = self._flops_memo.get(id(op))
+        if got is not None:
+            return got
+        out = self._op_flops(comp, op)
+        self._flops_memo[id(op)] = out
+        return out
+
+    def _op_flops(self, comp: Computation, op: SimOp) -> Dict[str, float]:
         oc = op.opcode
         out = {"mxu": 0.0, "vpu": 0.0, "trans": 0.0}
         if oc == "dot":
@@ -263,7 +288,17 @@ class SimModule:
         VMEM/registers).  Slice-update ops (dynamic-update-slice et al.) touch
         only the updated region — XLA updates them in place, so counting the
         full carried buffer would inflate scan-carried gradients ~30x.
+
+        Memoized per op.
         """
+        got = self._hbm_memo.get(id(op))
+        if got is not None:
+            return got
+        out = self._op_hbm_bytes(comp, op)
+        self._hbm_memo[id(op)] = out
+        return out
+
+    def _op_hbm_bytes(self, comp: Computation, op: SimOp) -> int:
         if op.opcode in ("parameter", "constant", "tuple", "get-tuple-element",
                          "bitcast", "after-all"):
             return 0
@@ -301,6 +336,14 @@ class SimModule:
     def collective_info(self, op: SimOp) -> Optional[Dict[str, Any]]:
         if op.opcode not in COLLECTIVE_OPS:
             return None
+        key = id(op)
+        if key in self._coll_memo:     # a cached result may be None
+            return self._coll_memo[key]
+        out = self._collective_info(op)
+        self._coll_memo[key] = out
+        return out
+
+    def _collective_info(self, op: SimOp) -> Optional[Dict[str, Any]]:
         group = 1
         members: Optional[Tuple[int, ...]] = None
         m = _RG_IOTA_RE.search(op.raw)

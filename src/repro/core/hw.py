@@ -6,6 +6,7 @@ gpgpusim.config file describing the GTX1080Ti/GTX1050 in the paper.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, Tuple
 
@@ -80,6 +81,22 @@ class HardwareSpec:
 
         return frac(m, tm) * frac(n, tn) * frac(k, 8)   # k packed by 8
 
+
+def _cached_spec_hash(self: "HardwareSpec") -> int:
+    """Memoized field-tuple hash (same value as the dataclass-generated
+    one).  Specs key every hot cache in the stack — engine maps, simulation
+    caches, lowering plans — and the 25-field tuple hash is measurable in
+    the cluster loop, so it is computed once per instance."""
+    try:
+        return self._hash            # type: ignore[attr-defined]
+    except AttributeError:
+        h = hash(tuple(getattr(self, f.name)
+                       for f in dataclasses.fields(self)))
+        object.__setattr__(self, "_hash", h)
+        return h
+
+
+HardwareSpec.__hash__ = _cached_spec_hash      # type: ignore[assignment]
 
 V5E = HardwareSpec()
 

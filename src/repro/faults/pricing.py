@@ -87,6 +87,12 @@ class CheckpointModel:
             return 0
         return max(int(round(self.interval_s / per_step_s)), 1)
 
+    def cache_key(self) -> tuple:
+        """Hashable identity for simulation-cache keys: two engine prices
+        computed under different checkpoint specs must never alias."""
+        return ("ckpt", self.interval_s, self.write_s, self.restore_s,
+                self.base_s)
+
 
 def parse_checkpoint_spec(spec: str) -> CheckpointModel:
     """CLI grammar for ``--checkpoint``::

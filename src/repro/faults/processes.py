@@ -155,10 +155,20 @@ class StochasticFailures(FailureProcess):
         if not math.isfinite(mtbf):
             return
         rng = random.Random(f"{self.seed}|{kind}|{key}")
+        # per-stream constants hoisted out of the draw loop (the weibull
+        # scale hides a gamma-function evaluation); the drawn sequence is
+        # identical to calling _ttf per renewal
+        weibull = self.dist == "weibull"
+        if weibull:
+            shape = self.weibull_k
+            scale = mtbf / math.gamma(1.0 + 1.0 / shape)
+        inv_mtbf = 1.0 / mtbf
+        inv_mttr = 1.0 / mttr if mttr > 0 else None
         t = 0.0
         while True:
-            t += self._ttf(rng, mtbf)
-            down = rng.expovariate(1.0 / mttr) if mttr > 0 else 0.0
+            t += rng.weibullvariate(scale, shape) if weibull \
+                else rng.expovariate(inv_mtbf)
+            down = rng.expovariate(inv_mttr) if inv_mttr is not None else 0.0
             yield (t, t + down)
             t += down
 

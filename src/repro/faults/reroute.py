@@ -25,6 +25,7 @@ policy does), making this the last-resort path.
 """
 from __future__ import annotations
 
+from functools import lru_cache
 from typing import AbstractSet, Optional, Sequence, Tuple
 
 from repro.core.hw import HardwareSpec
@@ -43,16 +44,24 @@ def gang_dilation(topo: Topology, members: Sequence[int],
     ``members`` are global device ids on ``topo``; ``broken`` holds
     undirected id pairs of failed physical links.  Returns 1.0 when no
     broken link can affect the gang, ``len(members)`` when the gang is
-    partitioned by the removals.
+    partitioned by the removals.  Pure in its arguments, so the probe
+    ratio is memoized — the cluster loop re-asks for the same (gang,
+    outage) pair on every epoch/checkpoint event.
     """
     if not broken or len(members) <= 1:
         return 1.0
+    return _dilation_cached(topo, tuple(members), frozenset(broken), hw)
+
+
+@lru_cache(maxsize=4096)
+def _dilation_cached(topo: Topology, members: Tuple[int, ...],
+                     broken: frozenset, hw: HardwareSpec) -> float:
     healthy = lower_collective("all-reduce", PROBE_BYTES, members, topo, hw)
     if healthy.seconds <= 0:
         return 1.0
     try:
         degraded = lower_collective("all-reduce", PROBE_BYTES, members, topo,
-                                    hw, broken=frozenset(broken))
+                                    hw, broken=broken)
     except ValueError:
         return float(len(members))
     return max(degraded.seconds / healthy.seconds, 1.0)

@@ -42,8 +42,13 @@ class FabricModel:
     lowers it once.
     """
 
-    def __init__(self, hw: HardwareSpec):
+    def __init__(self, hw: HardwareSpec,
+                 broken: Optional[frozenset] = None):
         self.hw = hw
+        #: failed undirected link pairs — every lowering routes around them,
+        #: so an Engine built with ``broken_links`` prices the DEGRADED fabric
+        self.broken: Optional[frozenset] = \
+            frozenset(broken) if broken else None
         spec = getattr(hw, "ici_topology", "ring")
         # shared grammar check: an unknown kind or unsized torus raises HERE
         # rather than silently simulating a per-group ring the user did not
@@ -88,7 +93,8 @@ class FabricModel:
         if sched is None:
             sched = lower_collective(kind, payload_bytes, mt,
                                      self.topology_for(mt), self.hw,
-                                     algorithm=algorithm, pairs=pt)
+                                     algorithm=algorithm, pairs=pt,
+                                     broken=self.broken)
             self._cache[key] = sched
         return sched
 

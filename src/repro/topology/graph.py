@@ -174,26 +174,8 @@ class Topology:
                     out.append(pair)
         return out
 
-    def _neighbor_positions(self, pos: int) -> List[int]:
-        n = self.num_devices
-        if self.kind == "fc":
-            return [p for p in range(n) if p != pos]
-        if self.kind == "ring":
-            if n <= 1:
-                return []
-            if n == 2:
-                return [1 - pos]
-            return [(pos + 1) % n, (pos - 1) % n]
-        out = []
-        c = self.coords(pos)
-        for ax, d in enumerate(self.dims):
-            if d <= 1:
-                continue
-            for step in ((1, -1) if d > 2 else (1,)):
-                nc = list(c)
-                nc[ax] = (c[ax] + step) % d
-                out.append(self.pos_of(nc))
-        return out
+    def _neighbor_positions(self, pos: int) -> Tuple[int, ...]:
+        return _neighbors_cached(self, pos)
 
     # -- metrics ------------------------------------------------------------
     def distance(self, a: int, b: int) -> int:
@@ -225,6 +207,12 @@ class Topology:
         those links removed.  Raises ``ValueError`` when the removal
         partitions ``a`` from ``b``.
         """
+        return list(_route_cached(self, a, b,
+                                  frozenset(avoid) if avoid else None))
+
+    def _route_uncached(self, a: int, b: int,
+                        avoid: Optional[AbstractSet[Tuple[int, int]]]
+                        ) -> List[Tuple[int, int]]:
         if avoid:
             return self._route_avoiding(a, b, avoid)
         if a == b:
@@ -290,13 +278,7 @@ class Topology:
         ``positions`` — the links a gang placed on that sub-slice runs its
         collectives over, and therefore the links whose failure forces the
         gang to re-route."""
-        ps = set(positions)
-        out = set()
-        for p in ps:
-            for nb in self._neighbor_positions(p):
-                if nb in ps:
-                    out.add(undirected_pair(self.ids[p], self.ids[nb]))
-        return frozenset(out)
+        return _internal_links_cached(self, tuple(sorted(set(positions))))
 
     def diameter(self, positions: Optional[Iterable[int]] = None) -> int:
         """Max pairwise distance over ``positions`` (default: all nodes)."""
@@ -328,6 +310,52 @@ class Topology:
         choice is deterministic.
         """
         return list(_sub_slices_cached(self, k))
+
+
+@lru_cache(maxsize=65536)
+def _neighbors_cached(topo: Topology, pos: int) -> Tuple[int, ...]:
+    """Memoized :meth:`Topology._neighbor_positions` — Topology is frozen,
+    so the neighbor list is pure in (topology, position)."""
+    n = topo.num_devices
+    if topo.kind == "fc":
+        return tuple(p for p in range(n) if p != pos)
+    if topo.kind == "ring":
+        if n <= 1:
+            return ()
+        if n == 2:
+            return (1 - pos,)
+        return ((pos + 1) % n, (pos - 1) % n)
+    out = []
+    c = topo.coords(pos)
+    for ax, d in enumerate(topo.dims):
+        if d <= 1:
+            continue
+        for step in ((1, -1) if d > 2 else (1,)):
+            nc = list(c)
+            nc[ax] = (c[ax] + step) % d
+            out.append(topo.pos_of(nc))
+    return tuple(out)
+
+
+@lru_cache(maxsize=65536)
+def _route_cached(topo: Topology, a: int, b: int,
+                  avoid: Optional[frozenset]) -> Tuple[Tuple[int, int], ...]:
+    """Memoized :meth:`Topology.route`.  ``ValueError`` (partitioned fabric)
+    propagates uncached, so probing again after links heal re-routes."""
+    return tuple(topo._route_uncached(a, b, avoid))
+
+
+@lru_cache(maxsize=65536)
+def _internal_links_cached(topo: Topology,
+                           positions: Tuple[int, ...]) -> frozenset:
+    """Memoized :meth:`Topology.internal_links` (frozenset is shared-safe)."""
+    ps = set(positions)
+    out = set()
+    for p in ps:
+        for nb in _neighbors_cached(topo, p):
+            if nb in ps:
+                out.add(undirected_pair(topo.ids[p], topo.ids[nb]))
+    return frozenset(out)
 
 
 @lru_cache(maxsize=128)

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.hw import HardwareSpec
@@ -86,32 +87,98 @@ class TransferSchedule:
         return max(self.link_bytes.values()) / mean
 
 
-class _Builder:
-    """Accumulates phases into a :class:`TransferSchedule`."""
+@dataclass(frozen=True)
+class _PlanPhase:
+    """One payload-independent phase of a lowered collective.
 
-    def __init__(self, kind: str, algorithm: str, group: int,
-                 payload: float, bw: float, lat: float):
-        self.sched = TransferSchedule(kind, algorithm, group, payload)
-        self.bw = max(bw, 1e-30)
-        self.lat = lat
+    ``hops`` lists every directed link the phase touches, in first-touch
+    order, with the *integer multiplicities* of the chunk it carries (a
+    tuple: the old builder sometimes merged two accumulation runs — e.g.
+    bidir-ring forward+reverse — and float addition is not associative, so
+    the runs must replay separately).  ``chunk_ops`` derives the chunk from
+    the payload ``S`` as a literal op chain (``('d', x)`` divides, ``('m',
+    x)`` multiplies) — replaying the exact float ops the unbatched lowering
+    performed keeps instantiation bit-identical for every payload.
+    """
 
-    def phase(self, transfers: Dict[Tuple[int, int], float],
+    hops: Tuple[Tuple[Tuple[int, int], Tuple[int, ...]], ...]
+    pipeline_hops: int
+    repeat: int
+    chunk_ops: Tuple[Tuple[str, float], ...]
+
+
+@dataclass(frozen=True)
+class _Plan:
+    """A payload/bandwidth-independent lowering: pure fabric geometry."""
+
+    kind: str
+    algorithm: str                # the RESOLVED algorithm (after fallbacks)
+    group: int
+    phases: Tuple[_PlanPhase, ...]
+
+
+class _PlanBuilder:
+    """Accumulates payload-independent phases into a :class:`_Plan`."""
+
+    def __init__(self, kind: str, algorithm: str, group: int):
+        self.kind = kind
+        self.algorithm = algorithm
+        self.group = group
+        self.phases: List[_PlanPhase] = []
+
+    def phase(self, mult: Dict[Tuple[int, int], Tuple[int, ...]],
+              chunk_ops: Tuple[Tuple[str, float], ...],
               pipeline_hops: int = 1, repeat: int = 1) -> None:
-        """One synchronous step: every link in ``transfers`` moves its bytes
-        concurrently; chunks pipeline over ``pipeline_hops`` store-and-forward
-        stages.  ``repeat`` collapses identical consecutive phases."""
-        if not transfers or repeat <= 0:
-            return
-        s = self.sched
-        step = max(b for b in transfers.values()) / self.bw \
-            + pipeline_hops * self.lat
-        s.seconds += step * repeat
-        s.hops += pipeline_hops * repeat
-        for (a, b), nbytes in transfers.items():
+        self.phases.append(_PlanPhase(tuple(mult.items()), pipeline_hops,
+                                      repeat, chunk_ops))
+
+    def plan(self) -> _Plan:
+        return _Plan(self.kind, self.algorithm, self.group,
+                     tuple(self.phases))
+
+
+def _instantiate(plan: _Plan, payload_bytes: float, bw: float,
+                 lat: float) -> TransferSchedule:
+    """Price a geometry plan for one payload/bandwidth/latency.
+
+    Replays exactly the float operations the original one-shot lowering
+    performed — chunk derivation as the recorded op chain, per-hop bytes as
+    repeated chunk additions — so a cached plan instantiates bit-identical
+    to an uncached lowering.
+    """
+    sched = TransferSchedule(plan.kind, plan.algorithm, plan.group,
+                             payload_bytes)
+    bw = max(bw, 1e-30)
+    S = float(payload_bytes)
+    for ph in plan.phases:
+        if not ph.hops or ph.repeat <= 0:
+            continue
+        chunk = S
+        for op, x in ph.chunk_ops:
+            chunk = chunk / x if op == "d" else chunk * x
+        vals: List[float] = []
+        mx = 0.0
+        first = True
+        for _hop, counts in ph.hops:
+            v = 0.0
+            for k in counts:
+                r = 0.0
+                for _ in range(k):
+                    r += chunk
+                v += r              # 0.0 + r == r exactly (bytes are >= 0)
+            vals.append(v)
+            if first or v > mx:
+                mx, first = v, False
+        step = mx / bw + ph.pipeline_hops * lat
+        sched.seconds += step * ph.repeat
+        sched.hops += ph.pipeline_hops * ph.repeat
+        for ((a, b), _counts), v in zip(ph.hops, vals):
             key = link_name(a, b)
-            s.link_bytes[key] = s.link_bytes.get(key, 0.0) + nbytes * repeat
-            s.link_seconds[key] = (s.link_seconds.get(key, 0.0)
-                                   + (nbytes / self.bw + self.lat) * repeat)
+            sched.link_bytes[key] = (sched.link_bytes.get(key, 0.0)
+                                     + v * ph.repeat)
+            sched.link_seconds[key] = (sched.link_seconds.get(key, 0.0)
+                                       + (v / bw + lat) * ph.repeat)
+    return sched
 
 
 # ---------------------------------------------------------------------------
@@ -127,13 +194,19 @@ def _ring_hop_routes(topo: Topology, order: Sequence[int],
             for i in range(g)]
 
 
-def _ring_transfers(routes: Sequence[List[Tuple[int, int]]], chunk: float
-                    ) -> Tuple[Dict[Tuple[int, int], float], int]:
-    transfers: Dict[Tuple[int, int], float] = {}
+def _ring_mult(routes: Sequence[List[Tuple[int, int]]]
+               ) -> Tuple[Dict[Tuple[int, int], int], int]:
+    """Per-hop chunk multiplicities (first-touch order) + pipeline depth."""
+    mult: Dict[Tuple[int, int], int] = {}
     for route in routes:
         for hop in route:
-            transfers[hop] = transfers.get(hop, 0.0) + chunk
-    return transfers, max((len(r) for r in routes), default=1)
+            mult[hop] = mult.get(hop, 0) + 1
+    return mult, max((len(r) for r in routes), default=1)
+
+
+def _counts(mult: Dict[Tuple[int, int], int]
+            ) -> Dict[Tuple[int, int], Tuple[int, ...]]:
+    return {hop: (k,) for hop, k in mult.items()}
 
 
 def _block_axes(topo: Topology, positions: Sequence[int]
@@ -217,6 +290,12 @@ def lower_collective(kind: str, payload_bytes: float,
     with the traffic already there — phase times stretch by exactly the
     induced link camping.  Raises ``ValueError`` if the removals partition
     the members.
+
+    Lowering splits in two: the payload-independent *geometry plan* (hop
+    multiplicities, pipeline depths, chunk-derivation op chains) is built
+    once per (kind, members, topo, algorithm, pairs, broken) and memoized,
+    then instantiated per payload — repeated collectives over the same
+    group reuse one plan regardless of payload size.
     """
     g = len(members)
     bw = hw.dcn_bw if topo.kind == "fc" \
@@ -227,7 +306,23 @@ def lower_collective(kind: str, payload_bytes: float,
                        f"known: {ALGORITHMS}")
     if g <= 1:
         return TransferSchedule(kind, algorithm or "ring", g, payload_bytes)
+    pairs_t = tuple((int(a), int(b)) for a, b in pairs) if pairs else None
+    plan = _build_plan(kind, tuple(members), topo, algorithm, pairs_t,
+                       None if broken is None else frozenset(broken))
+    return _instantiate(plan, payload_bytes, bw, lat)
 
+
+@lru_cache(maxsize=4096)
+def _build_plan(kind: str, members: Tuple[int, ...], topo: Topology,
+                algorithm: Optional[str],
+                pairs: Optional[Tuple[Tuple[int, int], ...]],
+                broken: Optional[frozenset]) -> _Plan:
+    """Build the payload-independent geometry plan for one collective.
+
+    Exceptions (``ValueError`` on a partitioned fabric) propagate and are
+    NOT cached by ``lru_cache``, so a later retry with healed links works.
+    """
+    g = len(members)
     pos_by_id = {dev: pos for pos, dev in enumerate(topo.ids)}
     positions = [pos_by_id[m] for m in members]
     rings = _block_axes(topo, positions)
@@ -245,8 +340,7 @@ def lower_collective(kind: str, payload_bytes: float,
     if algorithm == "halving" and (g & (g - 1)) != 0:
         algorithm = "ring"          # recursive halving needs a power of two
 
-    b = _Builder(kind, algorithm, g, payload_bytes, bw, lat)
-    S = float(payload_bytes)
+    pb = _PlanBuilder(kind, algorithm, g)
 
     if algorithm == "direct":
         # one concurrent phase carrying EVERY source->target pair; per-pair
@@ -255,30 +349,33 @@ def lower_collective(kind: str, payload_bytes: float,
         plist = [(pos_by_id[a], pos_by_id[b]) for a, b in pairs
                  if a in pos_by_id and b in pos_by_id and a != b] \
             if pairs else [(positions[0], positions[1 % g])]
-        transfers: Dict[Tuple[int, int], float] = {}
+        mult: Dict[Tuple[int, int], int] = {}
         ph = 1
-        for pa, pb in plist:
-            route = topo.route(pa, pb, avoid=broken)
+        for pa, pbp in plist:
+            route = topo.route(pa, pbp, avoid=broken)
             ph = max(ph, len(route))
             for hop in route:
-                transfers[hop] = transfers.get(hop, 0.0) + S
-        b.phase(transfers, pipeline_hops=ph)
-        return b.sched
+                mult[hop] = mult.get(hop, 0) + 1
+        pb.phase(_counts(mult), (), pipeline_hops=ph)    # chunk = S itself
+        return pb.plan()
 
     if algorithm == "torus":
         axes = [ax for ax, chains in enumerate(rings) if chains]
-        shard = S
+        ops: List[Tuple[str, float]] = []
         for ax in axes:                       # reduce-scatter sweep
             m = len(rings[ax][0])
-            _axis_ring_phases(b, topo, rings[ax], shard / m, m - 1,
-                              broken=broken)
-            shard /= m
+            mult, ph = _axis_ring_mult(topo, rings[ax], broken=broken)
+            pb.phase(_counts(mult), tuple(ops) + (("d", float(m)),),
+                     pipeline_hops=ph, repeat=m - 1)
+            ops.append(("d", float(m)))       # shard /= m
         for ax in reversed(axes):             # all-gather sweep back
             m = len(rings[ax][0])
-            _axis_ring_phases(b, topo, rings[ax], shard, m - 1, reverse=True,
-                              broken=broken)
-            shard *= m
-        return b.sched
+            mult, ph = _axis_ring_mult(topo, rings[ax], reverse=True,
+                                       broken=broken)
+            pb.phase(_counts(mult), tuple(ops), pipeline_hops=ph,
+                     repeat=m - 1)
+            ops.append(("m", float(m)))       # shard *= m
+        return pb.plan()
 
     order = _snake_order(topo, positions)
     routes = _ring_hop_routes(topo, order, broken)
@@ -289,15 +386,15 @@ def lower_collective(kind: str, payload_bytes: float,
     two_sweeps = kind == "all-reduce"
 
     if algorithm == "bidir-ring":
-        fwd, fh = _ring_transfers(routes, S / (2 * g))
+        fwd, fh = _ring_mult(routes)
         rev_routes = _ring_hop_routes(topo, list(reversed(order)), broken)
-        rev, rh = _ring_transfers(rev_routes, S / (2 * g))
-        both = dict(fwd)
-        for hop, v in rev.items():
-            both[hop] = both.get(hop, 0.0) + v
-        b.phase(both, pipeline_hops=max(fh, rh),
-                repeat=(2 if two_sweeps else 1) * (g - 1))
-        return b.sched
+        rev, rh = _ring_mult(rev_routes)
+        both = _counts(fwd)
+        for hop, k in rev.items():
+            both[hop] = both.get(hop, ()) + (k,)
+        pb.phase(both, (("d", float(2 * g)),), pipeline_hops=max(fh, rh),
+                 repeat=(2 if two_sweeps else 1) * (g - 1))
+        return pb.plan()
 
     if algorithm == "halving":
         # recursive halving (the "rs" sweep) / doubling (the "ag" sweep):
@@ -309,37 +406,43 @@ def lower_collective(kind: str, payload_bytes: float,
             srange = range(stages) if direction == "rs" \
                 else range(stages - 1, -1, -1)
             for s in srange:
-                chunk = S / (2 ** (s + 1))
-                transfers: Dict[Tuple[int, int], float] = {}
+                mult = {}
                 ph = 1
                 for i in range(g):
                     route = topo.route(order[i], order[i ^ (1 << s)],
                                        avoid=broken)
                     ph = max(ph, len(route))
                     for hop in route:
-                        transfers[hop] = transfers.get(hop, 0.0) + chunk
-                b.phase(transfers, pipeline_hops=ph)
-        return b.sched
+                        mult[hop] = mult.get(hop, 0) + 1
+                pb.phase(_counts(mult), (("d", float(2 ** (s + 1))),),
+                         pipeline_hops=ph)
+        return pb.plan()
 
     # plain unidirectional ring
-    transfers, ph = _ring_transfers(routes, S / g)
-    b.phase(transfers, pipeline_hops=ph,
-            repeat=(2 if two_sweeps else 1) * (g - 1))
-    return b.sched
+    mult, ph = _ring_mult(routes)
+    pb.phase(_counts(mult), (("d", float(g)),), pipeline_hops=ph,
+             repeat=(2 if two_sweeps else 1) * (g - 1))
+    return pb.plan()
 
 
-def _axis_ring_phases(b: _Builder, topo: Topology,
-                      chains: Sequence[Sequence[int]], chunk: float,
-                      nphases: int, reverse: bool = False,
-                      broken: Optional[frozenset] = None) -> None:
+def _axis_ring_mult(topo: Topology, chains: Sequence[Sequence[int]],
+                    reverse: bool = False,
+                    broken: Optional[frozenset] = None
+                    ) -> Tuple[Dict[Tuple[int, int], int], int]:
     """One axis sweep of the torus algorithm: every chain (a ring along this
-    axis) moves ``chunk`` around simultaneously for ``nphases`` steps."""
-    transfers: Dict[Tuple[int, int], float] = {}
+    axis) moves one chunk around simultaneously; returns hop multiplicities
+    and the pipeline depth of one step."""
+    mult: Dict[Tuple[int, int], int] = {}
     ph = 1
     for chain in chains:
         order = list(reversed(chain)) if reverse else list(chain)
         for route in _ring_hop_routes(topo, order, broken):
             ph = max(ph, len(route))
             for hop in route:
-                transfers[hop] = transfers.get(hop, 0.0) + chunk
-    b.phase(transfers, pipeline_hops=ph, repeat=nphases)
+                mult[hop] = mult.get(hop, 0) + 1
+    return mult, ph
+
+
+def clear_plan_cache() -> None:
+    """Drop memoized geometry plans (useful for benchmarks/tests)."""
+    _build_plan.cache_clear()

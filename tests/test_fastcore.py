@@ -1,0 +1,295 @@
+"""Batched-scheduler equivalence + delta re-simulation suite.
+
+The fast-core refactor (``repro.core.fastsched``) must be *semantics
+preserving*: the batched tape scheduler — record one walk, replay it for
+every later simulation — and the retained ``scheduler="legacy"`` reference
+walk must produce identical ``SimReport.summary()`` dicts, bit for bit,
+on every workload and knob combination.  This suite holds them to that:
+
+* captured golden workloads (the lenet and transformer smoke train steps,
+  the same modules ``tests/golden`` pins) across the engine knob grid;
+* a scan capture (while-loop body, trip-count scaling) and a hand-built
+  collective module (CALL/WHILE/link-claiming tape paths);
+* windowed runs replayed from a tape recorded without a window;
+* a hypothesis property: *delta re-simulation* (a cached tape repriced
+  for a perturbed broken-link set / replayed for a new window) matches a
+  cold legacy simulate of the same inputs;
+* the satellite bugfix: ``SimulationCache.key`` covers the faults layer
+  (broken links, checkpoint/faults key), so degraded-fabric prices can
+  never be served to a differently-degraded engine.
+"""
+import dataclasses
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:        # the property test skips; everything else runs
+    HAVE_HYPOTHESIS = False
+
+from repro.core import Engine, V5E, parse_hlo_module
+from repro.core.engine import SimulationCache
+from repro.topology import Topology
+
+# ---------------------------------------------------------------------------
+# workloads
+# ---------------------------------------------------------------------------
+
+#: (snapshot name, registered arch, seq_len, global_batch) — identical to
+#: tests/test_golden.py, so equivalence here covers the pinned snapshots
+GOLDEN_WORKLOADS = [
+    ("lenet", "lenet", 32, 8),
+    ("transformer", "llama3-8b", 64, 4),
+]
+
+#: engine knob grid the equivalence tests sweep
+KNOB_GRID = [
+    {},
+    {"memory_model": False},
+    {"topology_model": False},
+    {"overlap_collectives": False},
+    {"num_compute_streams": 4},
+]
+
+_ADDC = """
+%addc (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+"""
+
+#: dot feeding a 16-member all-reduce: exercises the link-claiming EXEC
+#: path and the ici delta tier on a sized torus fabric
+_AR_HLO = _ADDC + """
+ENTRY %main (p0: f32[1024,1024]) -> f32[1024,1024] {
+  %p0 = f32[1024,1024]{1,0} parameter(0)
+  %d0 = f32[1024,1024]{1,0} dot(%p0, %p0), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %ar = f32[1024,1024]{1,0} all-reduce(%d0), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, to_apply=%addc
+}
+"""
+
+TORUS_HW = dataclasses.replace(V5E, ici_topology="torus:4x4")
+TORUS_LINKS = tuple(Topology.from_spec("torus:4x4").links())
+
+
+@pytest.fixture(scope="module")
+def golden_modules():
+    """The two golden train-step captures, parsed once per test module."""
+    jax = pytest.importorskip("jax")  # noqa: F841
+    from repro import config as C
+    from repro.core.capture import capture_bundle
+    from repro.runtime.steps import train_bundle
+
+    mods = {}
+    for name, arch, seq_len, batch in GOLDEN_WORKLOADS:
+        entry = C.get(arch)
+        shape = C.ShapeConfig("fastcore", seq_len=seq_len,
+                              global_batch=batch, kind="train")
+        rc = C.RunConfig(model=entry.smoke, shape=shape, mesh=C.SMOKE_MESH)
+        mods[name] = capture_bundle(train_bundle(rc),
+                                    name=f"{name}_fastcore").module
+    return mods
+
+
+@pytest.fixture(scope="module")
+def scan_module():
+    """A lax.scan capture: while-loop tape recording + trip scaling."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.core.capture import capture
+
+    def f(x, w):
+        def body(c, _):
+            c = jnp.tanh(c @ w)
+            return c, jnp.sum(c)
+        c, ys = jax.lax.scan(body, x, None, length=8)
+        return c.sum() + ys.sum()
+
+    shape = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    return capture(f, shape, shape, name="fastcore_scan").module
+
+
+def _assert_same_summary(a, b, label):
+    sa, sb = a.summary(), b.summary()
+    assert sa == sb, (
+        f"{label}: batched != legacy on "
+        f"{ {k: (sa[k], sb[k]) for k in sa if sa.get(k) != sb.get(k)} }")
+
+
+# ---------------------------------------------------------------------------
+# equivalence: batched == legacy, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", [w[0] for w in GOLDEN_WORKLOADS])
+def test_batched_matches_legacy_on_golden(golden_modules, name):
+    mod = golden_modules[name]
+    legacy = Engine(scheduler="legacy").simulate(mod)
+    eng = Engine(scheduler="batched")
+    _assert_same_summary(eng.simulate(mod), legacy, f"{name} record")
+    # second call replays the tape — must stay identical, not just close
+    _assert_same_summary(eng.simulate(mod), legacy, f"{name} replay")
+
+
+@pytest.mark.parametrize("kw", KNOB_GRID,
+                         ids=lambda kw: ",".join(kw) or "default")
+def test_knob_grid_equivalence(scan_module, kw):
+    mod = scan_module
+    legacy = Engine(scheduler="legacy", **kw).simulate(mod)
+    eng = Engine(scheduler="batched", **kw)
+    _assert_same_summary(eng.simulate(mod), legacy, f"record {kw}")
+    _assert_same_summary(eng.simulate(mod), legacy, f"replay {kw}")
+    # a window replayed from the full-run tape == a cold windowed walk
+    window = (2, 9)
+    legacy_w = Engine(scheduler="legacy", **kw).simulate(mod, window=window)
+    _assert_same_summary(eng.simulate(mod, window=window), legacy_w,
+                         f"window {kw}")
+
+
+def test_collective_module_equivalence():
+    mod = parse_hlo_module(_AR_HLO)
+    legacy = Engine(TORUS_HW, scheduler="legacy").simulate(mod)
+    eng = Engine(TORUS_HW)
+    _assert_same_summary(eng.simulate(mod), legacy, "collective record")
+    _assert_same_summary(eng.simulate(mod), legacy, "collective replay")
+
+
+def test_unknown_scheduler_rejected():
+    with pytest.raises(KeyError):
+        Engine(scheduler="vectorized")
+
+
+# ---------------------------------------------------------------------------
+# delta re-simulation: repriced/replayed tape == cold simulate
+# ---------------------------------------------------------------------------
+
+def _check_delta_resim(links, window):
+    """A knob perturbation served from the tape registry (ici reprice for
+    broken links, straight replay for a window change) must equal a cold
+    legacy simulation of the perturbed inputs."""
+    mod = parse_hlo_module(_AR_HLO)
+    broken = frozenset(links) or None
+    cache = SimulationCache()
+    # donor: healthy fabric, records the tape into the shared cache
+    Engine(TORUS_HW, cache=cache).simulate(mod)
+    perturbed = Engine(TORUS_HW, cache=cache, broken_links=broken)
+    got = perturbed.simulate(mod, window=window)
+    cold = Engine(TORUS_HW, scheduler="legacy",
+                  broken_links=broken).simulate(mod, window=window)
+    _assert_same_summary(got, cold, f"delta broken={broken} window={window}")
+
+
+#: deterministic sample of single-knob perturbations — always runs, even
+#: without hypothesis installed
+DELTA_CASES = [
+    (frozenset(), None),
+    (frozenset({(0, 1)}), None),
+    (frozenset({(0, 1), (5, 6)}), None),
+    (frozenset({(2, 3), (8, 12), (14, 15)}), None),
+    (frozenset(), (1, 3)),
+    (frozenset({(0, 4)}), (0, 2)),
+    (frozenset({(1, 2), (9, 10)}), (2, 5)),
+]
+
+
+@pytest.mark.parametrize("links,window", DELTA_CASES,
+                         ids=[f"case{i}" for i in range(len(DELTA_CASES))])
+def test_delta_resim_matches_cold(links, window):
+    _check_delta_resim(links, window)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(links=st.sets(st.sampled_from(TORUS_LINKS), max_size=3),
+           window=st.one_of(st.none(),
+                            st.tuples(st.integers(0, 2),
+                                      st.integers(3, 6))))
+    def test_delta_resim_matches_cold_property(links, window):
+        _check_delta_resim(links, window)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_delta_resim_matches_cold_property():
+        pass
+
+
+def test_reprice_changes_degraded_price():
+    """The delta tier must genuinely reprice, not echo the donor."""
+    mod = parse_hlo_module(_AR_HLO)
+    cache = SimulationCache()
+    healthy = Engine(TORUS_HW, cache=cache).simulate(mod)
+    degraded = Engine(TORUS_HW, cache=cache,
+                      broken_links={(0, 1), (5, 6)}).simulate(mod)
+    assert degraded.total_seconds > healthy.total_seconds
+
+
+# ---------------------------------------------------------------------------
+# satellite bugfix: cache keys cover the faults layer
+# ---------------------------------------------------------------------------
+
+def test_cache_key_covers_faults_layer():
+    mod = parse_hlo_module(_AR_HLO)
+    cache = SimulationCache()
+    r_healthy = Engine(TORUS_HW, cache=cache).simulate(mod)
+    r_degraded = Engine(TORUS_HW, cache=cache,
+                        broken_links={(0, 1)}).simulate(mod)
+    # before the fix both engines hashed to one key: the second would have
+    # been a (wrong) cache hit
+    assert cache.misses == 2 and cache.hits == 0
+    assert r_healthy.summary() != r_degraded.summary()
+    # and an opaque faults key (e.g. a checkpoint spec) also separates
+    Engine(TORUS_HW, cache=cache, faults_key=("ckpt", 10.0)).simulate(mod)
+    Engine(TORUS_HW, cache=cache, faults_key=("ckpt", 20.0)).simulate(mod)
+    assert cache.misses == 4
+    # identical engines still share: the memoization is not broken, only
+    # properly keyed
+    Engine(TORUS_HW, cache=cache, broken_links={(0, 1)}).simulate(mod)
+    assert cache.hits == 1
+
+
+def test_tape_sharing_across_engines():
+    """Same-family engines replay one recorded tape via the shared cache
+    (different window => cache miss but NO re-walk: the report must still
+    be exact), and the legacy scheduler never touches the registry."""
+    mod = parse_hlo_module(_AR_HLO)
+    cache = SimulationCache()
+    e1 = Engine(TORUS_HW, cache=cache)
+    e1.simulate(mod)
+    e2 = Engine(TORUS_HW, cache=cache)
+    got = e2.simulate(mod, window=(1, 3))
+    want = Engine(TORUS_HW, scheduler="legacy").simulate(mod, window=(1, 3))
+    _assert_same_summary(got, want, "shared-tape window")
+    assert cache.misses == 2   # two distinct keys, zero extra walks proven
+    legacy = Engine(TORUS_HW, scheduler="legacy", cache=SimulationCache())
+    legacy.simulate(mod)
+    assert not legacy.cache._tapes
+
+
+# ---------------------------------------------------------------------------
+# satellite: per-op cost memos + percentile caching stay correct
+# ---------------------------------------------------------------------------
+
+def test_hlo_cost_memos_are_stable():
+    mod = parse_hlo_module(_AR_HLO)
+    comp = mod.computations[mod.entry]
+    dot = comp.by_name["d0"]
+    ar = comp.by_name["ar"]
+    assert mod.op_flops(comp, dot) is mod.op_flops(comp, dot)
+    assert mod.op_hbm_bytes(comp, dot) == mod.op_hbm_bytes(comp, dot)
+    assert mod.collective_info(ar) is mod.collective_info(ar)
+    assert mod.collective_info(dot) is None
+
+
+def test_latency_percentiles_sorted_once():
+    from repro.cluster import ClusterSim, Fleet, TableCostModel, make_policy
+    from repro.cluster.workload import synthetic_trace
+
+    trace = synthetic_trace("synthetic:poisson", n_jobs=30, seed=5)
+    table = {c.name: (0.05 * c.cost_scale, 2e9) for c in trace.classes}
+    rep = ClusterSim(Fleet.from_spec("4"), TableCostModel(table),
+                     make_policy("fifo")).run(trace)
+    p50, p95, p99 = (rep.latency_percentile(q) for q in (0.50, 0.95, 0.99))
+    assert p50 <= p95 <= p99
+    # repeated queries reuse the one sorted list and stay identical
+    assert rep.latency_percentile(0.95) == p95
+    assert rep.summary()["p95_latency_s"] == p95
