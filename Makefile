@@ -65,4 +65,4 @@ cluster:
 
 lint:
 	$(PYTHON) -m compileall -q src tests examples benchmarks
-	$(PYTHON) -c "import repro.core, repro.analysis, repro.memory, repro.topology, repro.cluster, repro.faults, repro.distributed.compression"
+	$(PYTHON) -c "import repro.core, repro.analysis, repro.memory, repro.topology, repro.cluster, repro.faults, repro.obs, repro.distributed.compression"

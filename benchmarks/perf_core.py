@@ -217,6 +217,48 @@ def smoke_check() -> int:
     return 0
 
 
+TRACE_OVERHEAD_TOLERANCE = 0.10      # enabled tracing may cost <= 10%
+
+
+def trace_overhead_check() -> int:
+    """CI gate: span tracing must be ~free disabled, <10% enabled.
+
+    Measures the engine benchmark (the hot path carrying the
+    ``engine.record``/``fastsched.replay`` spans) back-to-back with the
+    global tracer disabled then enabled, interleaved A/B/A so a machine
+    frequency step mid-run doesn't masquerade as overhead.
+    """
+    from repro.obs.trace import TRACER
+
+    repeats, rounds = 80, 3      # ~150 ms per measurement window
+    TRACER.disable()
+    bench_engine(repeats, legacy=False)          # warmup, untimed
+    offs, ons = [], []
+    try:
+        for _ in range(rounds):
+            TRACER.disable()
+            offs.append(bench_engine(repeats, legacy=False))
+            TRACER.enable()
+            ons.append(bench_engine(repeats, legacy=False))
+    finally:
+        TRACER.disable()
+        TRACER.clear()
+    # best-of-N on both sides: peak throughput is the noise-robust
+    # estimator, and any real span cost caps the enabled peak too
+    off, on = max(offs), max(ons)
+    loss = 1.0 - (on / off) if off > 0 else 0.0
+    status = "ok" if loss <= TRACE_OVERHEAD_TOLERANCE else "REGRESSED"
+    print(f"trace-overhead: disabled={off:,.0f} ops/s  "
+          f"enabled={on:,.0f} ops/s  loss={loss:+.1%} [{status}]")
+    if status != "ok":
+        print(f"trace-overhead: FAILED — enabled tracing costs more than "
+              f"{TRACE_OVERHEAD_TOLERANCE:.0%} engine throughput; spans on "
+              "the simulate/replay hot path are too fine-grained")
+        return 1
+    print("trace-overhead: within tolerance")
+    return 0
+
+
 def run(emit) -> None:
     """benchmarks/run.py section hook."""
     res = measure(smoke=True)
@@ -235,8 +277,13 @@ def main() -> int:
                     help="write the 'after' baseline into BENCH_perf.json")
     ap.add_argument("--record-before", action="store_true",
                     help="write the 'before' (pre-refactor) baseline")
+    ap.add_argument("--trace-overhead", action="store_true",
+                    help="gate: repro.obs span tracing must cost <10%% "
+                         "engine throughput when enabled")
     args = ap.parse_args()
 
+    if args.trace_overhead:
+        return trace_overhead_check()
     if args.smoke:
         return smoke_check()
 

@@ -79,11 +79,12 @@ class AnalysisReport:
     def ascii_timeline(self, width: int = 72) -> str:
         return ascii_timeline(self, width)
 
-    def to_json(self, indent: Optional[int] = None) -> str:
-        return to_json(self, indent=indent)
+    def to_json(self, indent: Optional[int] = None,
+                stage_seconds=None) -> str:
+        return to_json(self, indent=indent, stage_seconds=stage_seconds)
 
-    def to_chrome_trace(self) -> str:
-        return to_chrome_trace(self)
+    def to_chrome_trace(self, extra_events=None) -> str:
+        return to_chrome_trace(self, extra_events=extra_events)
 
     def reconcile(self) -> float:
         """Max relative error of bucket sums vs ``report.summary()``."""

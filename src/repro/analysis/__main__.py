@@ -48,9 +48,25 @@ def build_parser() -> argparse.ArgumentParser:
                         "the batched tape scheduler (results are identical; "
                         "tests/test_fastcore.py holds them to that)")
     p.add_argument("--chrome-trace", metavar="PATH",
-                   help="write chrome://tracing JSON here ('-' for stdout)")
+                   help="write chrome://tracing JSON here ('-' for stdout); "
+                        "time-lapse counter tracks and self-spans (when "
+                        "--timelapse / --spans are active) compose into the "
+                        "same file")
     p.add_argument("--json", metavar="PATH",
                    help="write the full analysis JSON here ('-' for stdout)")
+    p.add_argument("--timelapse", metavar="PATH",
+                   help="write the AerialVision time-lapse JSON here "
+                        "('-' for stdout); also renders the ASCII heat "
+                        "strips ('!' marks channel-camping intervals)")
+    p.add_argument("--lapse-intervals", type=int, default=64,
+                   help="fixed sampling intervals for --timelapse "
+                        "(default 64)")
+    p.add_argument("--manifest", metavar="PATH",
+                   help="write a repro.obs run manifest here (compare runs "
+                        "with `python -m repro.obs diff A B`)")
+    p.add_argument("--spans", metavar="PATH",
+                   help="enable the simulator self-span tracer and write its "
+                        "chrome trace here ('-' for stdout)")
     p.add_argument("--width", type=int, default=72,
                    help="ASCII timeline width in columns")
     p.add_argument("--self-profile", action="store_true",
@@ -62,20 +78,16 @@ def build_parser() -> argparse.ArgumentParser:
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
 
-    import time
-
-    prof: dict = {}
-    t_stage = time.perf_counter()
-
-    def mark(stage: str) -> None:
-        nonlocal t_stage
-        now = time.perf_counter()
-        prof[stage] = prof.get(stage, 0.0) + (now - t_stage)
-        t_stage = now
-
     from repro import config as C
     from repro.core import CHIPS, Simulator
+    from repro.obs.metrics import StageTimer
+    from repro.obs.trace import TRACER
     from repro.runtime.steps import train_bundle
+
+    timer = StageTimer("analysis")
+    mark = timer.mark
+    if args.spans:
+        TRACER.enable()
 
     if args.buckets <= 0:
         print(f"--buckets must be positive, got {args.buckets}",
@@ -154,25 +166,63 @@ def main(argv=None) -> int:
           f"{ar.reconcile() * 100:.3f}%")
     mark("render")
 
-    for path, payload in ((args.chrome_trace, ar.to_chrome_trace()),
-                          (args.json, ar.to_json(indent=2))):
-        if not path:
-            continue
+    lapse = None
+    if args.timelapse or args.manifest or args.chrome_trace:
+        from repro.obs.timelapse import TimeLapse
+        lapse = TimeLapse.from_report(rep, num_intervals=args.lapse_intervals,
+                                      label=args.arch)
+    if args.timelapse:
+        print()
+        print(lapse.heat_strips(width=args.width))
+
+    outputs = []
+    if args.chrome_trace:
+        extra: list = lapse.to_chrome_events() if lapse is not None else []
+        if TRACER.enabled:
+            extra = extra + TRACER.to_chrome_events()
+        outputs.append((args.chrome_trace,
+                        ar.to_chrome_trace(extra_events=extra)))
+    if args.json:
+        outputs.append((args.json,
+                        ar.to_json(indent=2,
+                                   stage_seconds=timer.stage_seconds)))
+    if args.timelapse:
+        outputs.append((args.timelapse, lapse.to_json(indent=2)))
+    if args.manifest:
+        from repro.obs.manifest import engine_manifest
+        man = engine_manifest(
+            rep,
+            config={"arch": args.arch, "full": args.full,
+                    "seq_len": args.seq_len, "batch": args.batch,
+                    "buckets": args.buckets, "hw": args.hw,
+                    "overlap": not args.no_overlap,
+                    "memory": not args.no_memory,
+                    "topology": args.topology or rep.hw.ici_topology,
+                    "scheduler": ("legacy" if args.legacy_scheduler
+                                  else "batched")},
+            label=args.arch, stage_seconds=timer.stage_seconds,
+            timelapse=lapse)
+        outputs.append((args.manifest, man.to_json()))
+    for path, payload in outputs:
         if path == "-":
             print(payload)
         else:
             with open(path, "w") as f:
                 f.write(payload)
             print(f"wrote {path}", file=sys.stderr)
+    mark("export")
+    if args.spans:
+        from repro.obs.export import trace_json
+        payload = trace_json(TRACER.to_chrome_events())
+        if args.spans == "-":
+            print(payload)
+        else:
+            with open(args.spans, "w") as f:
+                f.write(payload)
+            print(f"wrote {args.spans} "
+                  f"({len(TRACER.records)} spans)", file=sys.stderr)
     if args.self_profile:
-        mark("export")
-        total = sum(prof.values())
-        print("self-profile (wall-clock):", file=sys.stderr)
-        for stage, sec in prof.items():
-            share = sec / total * 100 if total > 0 else 0.0
-            print(f"  {stage:<8s} {sec:8.3f} s  {share:5.1f}%",
-                  file=sys.stderr)
-        print(f"  {'total':<8s} {total:8.3f} s", file=sys.stderr)
+        print(timer.render(), file=sys.stderr)
     return 0
 
 

@@ -14,24 +14,19 @@ Three renderings of the same :class:`~repro.analysis.AnalysisReport`:
 from __future__ import annotations
 
 import json
-from typing import List
+from typing import Dict, List, Optional
 
 from repro.analysis.intervals import IntervalProfile, UNITS
 from repro.analysis.phases import Phase
 from repro.core.trace import op_events
+# the shade ramp and Trace Event constructors live in repro.obs.export now
+# (shared with the fleet and time-lapse renderers); SHADES/shade stay
+# re-exported here for compatibility
+from repro.obs.export import (SHADES, counter_event, duration_event, shade,
+                              thread_meta, trace_json)
 
 # chrome-trace thread id for the phase lane (op lanes: core.trace.LANES)
 _PHASE_TID = 10
-
-#: occupancy shade ramp shared by every ASCII renderer (0.0 -> ' ',
-#: 1.0 -> '@'); repro.cluster.export reuses it for the fleet view
-SHADES = " .:-=+*#%@"
-
-
-def shade(value: float) -> str:
-    """Map an occupancy fraction in [0, 1] to one :data:`SHADES` glyph."""
-    idx = int(max(value, 0.0) * (len(SHADES) - 1))
-    return SHADES[min(idx, len(SHADES) - 1)]
 
 
 #: one-letter key used by the ASCII phase strip
@@ -44,8 +39,13 @@ PHASE_GLYPHS = {
 }
 
 
-def to_json(analysis, indent: int = None) -> str:
-    """Serialize a full :class:`~repro.analysis.AnalysisReport` to JSON."""
+def to_json(analysis, indent: int = None,
+            stage_seconds: Optional[Dict[str, float]] = None) -> str:
+    """Serialize a full :class:`~repro.analysis.AnalysisReport` to JSON.
+
+    ``stage_seconds`` (from :class:`repro.obs.metrics.StageTimer`) embeds
+    the CLI's wall-clock self-profile in the document.
+    """
     prof: IntervalProfile = analysis.profile
     doc = {
         "summary": analysis.report.summary(),
@@ -83,42 +83,40 @@ def to_json(analysis, indent: int = None) -> str:
             "hot_contributors": analysis.links.hot_contributors,
             "link_busy_seconds": analysis.report.link_busy_seconds,
         }
+    if stage_seconds is not None:
+        doc["stage_seconds"] = dict(stage_seconds)
     return json.dumps(doc, indent=indent)
 
 
-def to_chrome_trace(analysis) -> str:
-    """Trace Event Format JSON: ops + phase lane + occupancy counters."""
+def to_chrome_trace(analysis, extra_events: Optional[List[dict]] = None) -> str:
+    """Trace Event Format JSON: ops + phase lane + occupancy counters.
+
+    ``extra_events`` lets the CLI splice additional tracks (time-lapse
+    counters on pid 0, simulator self-spans on pid 1) into the same file.
+    """
     events = []
     for tid, lane in [(0, "mxu"), (1, "vpu"), (2, "hbm"), (3, "ici"),
                       (4, "overhead"), (_PHASE_TID, "phases")]:
-        events.append({"name": "thread_name", "ph": "M", "pid": 0, "tid": tid,
-                       "args": {"name": lane}})
+        events.append(thread_meta(lane, tid))
     events.extend(op_events(analysis.report))
     for p in analysis.phases:
-        events.append({
-            "name": p.label, "cat": "phase", "ph": "X",
-            "ts": p.t0 * 1e6, "dur": max(p.seconds * 1e6, 0.01),
-            "pid": 0, "tid": _PHASE_TID,
-            "args": {"dominant_unit": p.dominant_unit,
-                     "occupancy": p.occupancy, "flops": p.flops},
-        })
+        events.append(duration_event(
+            p.label, "phase", p.t0, p.seconds, tid=_PHASE_TID,
+            args={"dominant_unit": p.dominant_unit,
+                  "occupancy": p.occupancy, "flops": p.flops}))
     for iv in analysis.profile.intervals:
-        events.append({
-            "name": "occupancy", "cat": "interval", "ph": "C",
-            "ts": iv.t0 * 1e6, "pid": 0,
-            "args": {u: round(iv.occupancy(u), 4) for u in UNITS},
-        })
+        events.append(counter_event(
+            "occupancy", "interval", iv.t0,
+            {u: round(iv.occupancy(u), 4) for u in UNITS}))
     # per-link counter track: one sample per collective op, so Perfetto
     # shows WHICH fabric links each transfer landed on over time
     for e in analysis.report.timeline:
         if e.unit == "ici" and getattr(e, "link_bytes", None):
-            events.append({
-                "name": "link_bytes", "cat": "link", "ph": "C",
-                "ts": e.start * 1e6, "pid": 0,
-                "args": {l: round(b * e.scale, 1)
-                         for l, b in sorted(e.link_bytes.items())},
-            })
-    return json.dumps({"traceEvents": events, "displayTimeUnit": "ns"})
+            events.append(counter_event(
+                "link_bytes", "link", e.start,
+                {l: round(b * e.scale, 1)
+                 for l, b in sorted(e.link_bytes.items())}))
+    return trace_json(events, extra_events or [])
 
 
 def ascii_timeline(analysis, width: int = 72) -> str:

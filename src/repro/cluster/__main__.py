@@ -79,9 +79,24 @@ def build_parser() -> argparse.ArgumentParser:
                    help="write the (possibly generated) trace JSON here")
     p.add_argument("--chrome-trace", metavar="PATH",
                    help="write the fleet chrome://tracing JSON here "
-                        "('-' for stdout)")
+                        "('-' for stdout); time-lapse counter tracks and "
+                        "self-spans (when --timelapse / --spans are active) "
+                        "compose into the same file")
     p.add_argument("--json", metavar="PATH",
                    help="write the full report JSON here ('-' for stdout)")
+    p.add_argument("--timelapse", metavar="PATH",
+                   help="write the fleet time-lapse JSON here "
+                        "('-' for stdout); also renders the ASCII heat "
+                        "strips")
+    p.add_argument("--lapse-intervals", type=int, default=64,
+                   help="fixed sampling intervals for --timelapse "
+                        "(default 64)")
+    p.add_argument("--manifest", metavar="PATH",
+                   help="write a repro.obs run manifest here (compare runs "
+                        "with `python -m repro.obs diff A B`)")
+    p.add_argument("--spans", metavar="PATH",
+                   help="enable the simulator self-span tracer and write its "
+                        "chrome trace here ('-' for stdout)")
     p.add_argument("--width", type=int, default=72,
                    help="ASCII fleet timeline width in columns")
     p.add_argument("--self-profile", action="store_true",
@@ -94,21 +109,17 @@ def build_parser() -> argparse.ArgumentParser:
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
 
-    import time
-
-    prof: dict = {}
-    t_stage = time.perf_counter()
-
-    def mark(stage: str) -> None:
-        nonlocal t_stage
-        now = time.perf_counter()
-        prof[stage] = prof.get(stage, 0.0) + (now - t_stage)
-        t_stage = now
-
     from repro.cluster import (ClusterSim, Fleet, Trace, cost_model_for,
                                fleet_ascii, fleet_chrome_trace, make_policy,
                                synthetic_trace, to_json)
     from repro.faults import parse_checkpoint_spec, parse_failure_spec
+    from repro.obs.metrics import StageTimer
+    from repro.obs.trace import TRACER
+
+    timer = StageTimer("cluster")
+    mark = timer.mark
+    if args.spans:
+        TRACER.enable()
 
     try:
         policy = make_policy(args.policy)
@@ -200,28 +211,66 @@ def main(argv=None) -> int:
             print("TIME ACCOUNTING FAILED (> 1%)", file=sys.stderr)
             return 1
     mark("render")
+    rep.stage_seconds.update(timer.stage_seconds)
 
-    for path, render in ((args.chrome_trace, lambda: fleet_chrome_trace(rep)),
-                         (args.json, lambda: to_json(rep, indent=2))):
-        if not path:
-            continue
-        payload = render()
+    lapse = None
+    if args.timelapse or args.manifest or args.chrome_trace:
+        from repro.obs.timelapse import TimeLapse
+        lapse = TimeLapse.from_cluster(
+            rep, num_intervals=args.lapse_intervals,
+            label=f"{rep.trace_name} x {rep.policy}")
+    if args.timelapse:
+        print()
+        print(lapse.heat_strips(width=args.width))
+
+    outputs = []
+    if args.chrome_trace:
+        extra: list = lapse.to_chrome_events() if lapse is not None else []
+        if TRACER.enabled:
+            extra = extra + TRACER.to_chrome_events()
+        outputs.append((args.chrome_trace,
+                        fleet_chrome_trace(rep, extra_events=extra)))
+    if args.json:
+        outputs.append((args.json, to_json(rep, indent=2)))
+    if args.timelapse:
+        outputs.append((args.timelapse, lapse.to_json(indent=2)))
+    if args.manifest:
+        from repro.obs.manifest import cluster_manifest
+        man = cluster_manifest(
+            rep,
+            config={"trace": args.trace, "policy": args.policy,
+                    "devices": args.devices, "topology": args.topology,
+                    "jobs": args.jobs, "rate": args.rate, "cost": args.cost,
+                    "cold_start_s": args.cold_start,
+                    "quantum_s": args.quantum, "failures": args.failures,
+                    "checkpoint": args.checkpoint,
+                    "scheduler": ("legacy" if args.legacy_scheduler
+                                  else "batched"),
+                    "elastic": not args.no_elastic},
+            seeds={"seed": args.seed},
+            stage_seconds=timer.stage_seconds, timelapse=lapse)
+        outputs.append((args.manifest, man.to_json()))
+    for path, payload in outputs:
         if path == "-":
             print(payload)
         else:
             with open(path, "w") as f:
                 f.write(payload)
             print(f"wrote {path}", file=sys.stderr)
+    mark("export")
+    rep.stage_seconds.update(timer.stage_seconds)
+    if args.spans:
+        from repro.obs.export import trace_json
+        payload = trace_json(TRACER.to_chrome_events())
+        if args.spans == "-":
+            print(payload)
+        else:
+            with open(args.spans, "w") as f:
+                f.write(payload)
+            print(f"wrote {args.spans} "
+                  f"({len(TRACER.records)} spans)", file=sys.stderr)
     if args.self_profile:
-        mark("export")
-        rep.stage_seconds.update(prof)
-        total = sum(prof.values())
-        print("self-profile (wall-clock):", file=sys.stderr)
-        for stage, sec in prof.items():
-            share = sec / total * 100 if total > 0 else 0.0
-            print(f"  {stage:<8s} {sec:8.3f} s  {share:5.1f}%",
-                  file=sys.stderr)
-        print(f"  {'total':<8s} {total:8.3f} s", file=sys.stderr)
+        print(timer.render(), file=sys.stderr)
     return 0
 
 

@@ -62,6 +62,8 @@ from repro.cluster.workload import Job, Trace
 from repro.faults.pricing import CheckpointModel
 from repro.faults.processes import DEVICE, LINK, FailureProcess, link_key
 from repro.faults.reroute import gang_dilation
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import TRACER
 from repro.topology.graph import undirected_pair
 
 _ARRIVAL, _FINISH, _FAIL, _REPAIR = 0, 1, 2, 3
@@ -356,6 +358,38 @@ class ClusterSim:
 
     # ------------------------------------------------------------------
     def run(self, trace: Trace) -> ClusterReport:
+        with TRACER.span("cluster.run", policy=self.policy.name,
+                         trace=trace.name, devices=len(self.fleet),
+                         jobs=len(trace.jobs)):
+            report = self._run(trace)
+        self._publish_metrics(report)
+        return report
+
+    def _publish_metrics(self, report: "ClusterReport") -> None:
+        """Bulk-publish one run's loop counters into the obs registry.
+
+        Done once per run (never inside the event loop) so the hot path
+        keeps its plain local counters; labels carry the policy so
+        multi-policy sweeps in one process stay distinguishable."""
+        c = REGISTRY.counter
+        policy = report.policy
+        c("cluster_runs_total", policy=policy).inc()
+        c("cluster_events_total", policy=policy).inc(
+            report.events_processed)
+        c("cluster_hol_events_total", policy=policy).inc(report.hol_events)
+        c("cluster_hol_bypasses_total", policy=policy).inc(
+            report.hol_bypasses)
+        c("cluster_device_failures_total", policy=policy).inc(
+            report.device_failures)
+        c("cluster_link_failures_total", policy=policy).inc(
+            report.link_failures)
+        c("cluster_recoveries_total", policy=policy).inc(report.recoveries)
+        c("cluster_gang_reshapes_total", policy=policy).inc(
+            report.gang_reshapes)
+        REGISTRY.histogram("cluster_makespan_seconds", policy=policy) \
+            .observe(report.makespan_s)
+
+    def _run(self, trace: Trace) -> ClusterReport:
         fleet, cost, ckpt = self.fleet, self.cost, self.checkpoint
         for dev in fleet:            # reset between runs: fleets are reusable
             dev.free_at = dev.busy_seconds = dev.setup_seconds = 0.0
@@ -572,6 +606,8 @@ class ClusterSim:
                 active[d.device_id] = ctx
             if nd > 1:
                 gangs[id(ctx)] = ctx      # link-failure kill scan registry
+                TRACER.instant("cluster.gang_start", job=job.job_id,
+                               devices=nd, t_sim=now)
             if qj.first_start_s is None:
                 qj.first_start_s = t0
                 rec.start_s = t0
@@ -595,6 +631,8 @@ class ClusterSim:
             nonlocal arrival_seq, pending_reshapes
             qj: QueuedJob = ctx["qj"]
             devs = ctx["devs"]
+            TRACER.instant("cluster.gang_kill", job=qj.job.job_id,
+                           devices=len(devs), t_sim=now)
             qj.epoch += 1                 # invalidate the pending FINISH
             rec = records[qj.job.job_id]
             rec.failures += 1
@@ -670,6 +708,8 @@ class ClusterSim:
                 qj.service_s = predicted_service(qj)
                 gang_reshapes += 1
                 records[qj.job.job_id].reshapes += 1
+                TRACER.instant("cluster.gang_reshape", job=qj.job.job_id,
+                               old=old_nd, new=qj.num_devices)
                 n = nd_counts[old_nd] - 1
                 if n:
                     nd_counts[old_nd] = n
@@ -800,6 +840,8 @@ class ClusterSim:
                     if finished >= total_jobs:
                         continue          # fleet drained: outage is moot
                     marks.append({"t": now, "target": tkind, "key": key})
+                    TRACER.instant("cluster.fail", target=tkind, key=key,
+                                   t_sim=now)
                     if tkind == DEVICE:
                         device_failures += 1
                         down_iv[key].append((now, rep_t))
@@ -829,6 +871,8 @@ class ClusterSim:
                 else:                     # _REPAIR
                     tkind, key, pair = payload
                     recoveries += 1
+                    TRACER.instant("cluster.repair", target=tkind, key=key,
+                                   t_sim=now)
                     if tkind == DEVICE:
                         device_down.pop(key, None)
                         sched_blocked = False     # the free set just grew

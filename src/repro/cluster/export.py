@@ -17,10 +17,11 @@ as "that gang died here and re-restored twice".
 from __future__ import annotations
 
 import json
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
-from repro.analysis.export import SHADES, shade
 from repro.cluster.events import ClusterReport
+from repro.obs.export import (SHADES, counter_event, duration_event,
+                              instant_event, shade, thread_meta, trace_json)
 
 #: counter-track tid, placed after the per-device lanes
 _QUEUE_TID_OFFSET = 1000
@@ -49,59 +50,55 @@ def _queue_depth_events(report: ClusterReport) -> List[Tuple[float, int]]:
     return sorted(deltas, key=lambda d: (d[0], -d[1]))
 
 
-def fleet_chrome_trace(report: ClusterReport) -> str:
-    """Trace Event Format: one track per device + a queue-depth counter."""
+def fleet_chrome_trace(report: ClusterReport,
+                       extra_events: Optional[List[dict]] = None) -> str:
+    """Trace Event Format: one track per device + a queue-depth counter.
+
+    ``extra_events`` lets the CLI splice additional tracks (cluster
+    time-lapse counters on pid 0, simulator self-spans on pid 1) into the
+    same file.
+    """
     device_ids = sorted(report.per_device_busy)
     tid = {d: i for i, d in enumerate(device_ids)}
     events: List[dict] = []
     for d, i in tid.items():
-        events.append({"name": "thread_name", "ph": "M", "pid": 0, "tid": i,
-                       "args": {"name": d}})
+        events.append(thread_meta(d, i))
     by_id = {j.job_id: j for j in report.jobs}
     for s in report.slices:
         rec = by_id.get(s.job_id)
-        events.append({
-            "name": (f"{s.job_class}:{s.job_id}" if s.kind == "run"
-                     else f"{s.kind}:{s.job_class}"),
-            "cat": s.kind, "ph": "X",
-            "ts": s.t0 * 1e6, "dur": max((s.t1 - s.t0) * 1e6, 0.01),
-            "pid": 0, "tid": tid.get(s.device_id, len(tid)),
-            "args": {"job_class": s.job_class, "steps": s.steps,
-                     "ckpt_s": s.ckpt_s, "lost_s": s.lost_s,
-                     "price_factor": s.price_factor,
-                     "user": rec.user if rec else "",
-                     "queue_delay_s": rec.queue_delay_s if rec else 0.0},
-        })
+        events.append(duration_event(
+            (f"{s.job_class}:{s.job_id}" if s.kind == "run"
+             else f"{s.kind}:{s.job_class}"),
+            s.kind, s.t0, s.t1 - s.t0,
+            tid=tid.get(s.device_id, len(tid)),
+            args={"job_class": s.job_class, "steps": s.steps,
+                  "ckpt_s": s.ckpt_s, "lost_s": s.lost_s,
+                  "price_factor": s.price_factor,
+                  "user": rec.user if rec else "",
+                  "queue_delay_s": rec.queue_delay_s if rec else 0.0}))
     # failure story: instant markers, per-device down windows, fabric track
     for m in report.failure_marks:
-        events.append({"name": f"FAIL {m['target']} {m['key']}",
-                       "cat": "failure", "ph": "i", "s": "g",
-                       "ts": m["t"] * 1e6, "pid": 0,
-                       "tid": tid.get(m["key"], _FABRIC_TID)})
+        events.append(instant_event(
+            f"FAIL {m['target']} {m['key']}", "failure", m["t"],
+            tid=tid.get(m["key"], _FABRIC_TID)))
     for dev, intervals in report.down_intervals.items():
         for t0, t1 in intervals:
-            events.append({"name": "down", "cat": "down", "ph": "X",
-                           "ts": t0 * 1e6,
-                           "dur": max((t1 - t0) * 1e6, 0.01),
-                           "pid": 0, "tid": tid.get(dev, _FABRIC_TID),
-                           "cname": "grey"})
+            events.append(duration_event(
+                "down", "down", t0, t1 - t0,
+                tid=tid.get(dev, _FABRIC_TID), cname="grey"))
     if report.link_down_intervals:
-        events.append({"name": "thread_name", "ph": "M", "pid": 0,
-                       "tid": _FABRIC_TID, "args": {"name": "fabric"}})
+        events.append(thread_meta("fabric", _FABRIC_TID))
         for key, intervals in sorted(report.link_down_intervals.items()):
             for t0, t1 in intervals:
-                events.append({"name": f"link {key} down", "cat": "down",
-                               "ph": "X", "ts": t0 * 1e6,
-                               "dur": max((t1 - t0) * 1e6, 0.01),
-                               "pid": 0, "tid": _FABRIC_TID,
-                               "cname": "grey"})
+                events.append(duration_event(
+                    f"link {key} down", "down", t0, t1 - t0,
+                    tid=_FABRIC_TID, cname="grey"))
     depth = 0
     for t, delta in _queue_depth_events(report):
         depth += delta
-        events.append({"name": "queue_depth", "cat": "queue", "ph": "C",
-                       "ts": t * 1e6, "pid": 0,
-                       "args": {"jobs_waiting": depth}})
-    return json.dumps({"traceEvents": events, "displayTimeUnit": "ns"})
+        events.append(counter_event("queue_depth", "queue", t,
+                                    {"jobs_waiting": depth}))
+    return trace_json(events, extra_events or [])
 
 
 def to_json(report: ClusterReport, indent: int = None) -> str:
@@ -132,6 +129,7 @@ def to_json(report: ClusterReport, indent: int = None) -> str:
         "down_intervals": report.down_intervals,
         "link_down_intervals": report.link_down_intervals,
         "failure_marks": report.failure_marks,
+        "stage_seconds": dict(report.stage_seconds),
     }
     return json.dumps(doc, indent=indent)
 

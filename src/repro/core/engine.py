@@ -59,6 +59,8 @@ from repro.core.hlo_ir import (
 )
 from repro.core.hw import HardwareSpec, V5E
 from repro.core.timing import OpTime, op_time
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import TRACER
 
 SKIP_OPS = ("parameter", "constant", "tuple", "get-tuple-element", "bitcast",
             "after-all", "partition-id", "replica-id", "domain",
@@ -103,6 +105,10 @@ class TimelineEntry:
     #: per-iteration ICI bytes per link ("ici:<src>-<dst>" keys) from the
     #: topology lowering of a collective; None on non-collectives/legacy runs
     link_bytes: Optional[Dict[str, float]] = None
+    #: per-iteration busy SECONDS per link (same keys) — what
+    #: ``SimReport.link_busy_seconds`` accumulates; recorded so the
+    #: time-lapse can apportion link utilization to intervals exactly
+    link_seconds: Optional[Dict[str, float]] = None
 
 
 @dataclass
@@ -286,6 +292,10 @@ class SimulationCache:
         #: tape family -> (faults part, ModuleTape): donor tapes for the
         #: batched scheduler's cross-engine delta re-simulation
         self._tapes: Dict[tuple, tuple] = {}
+        # registry children resolved once: lookup() is the cluster's
+        # hottest call site, so publishing must be one bound .inc()
+        self._hits_ctr = REGISTRY.counter("sim_cache_hits_total")
+        self._misses_ctr = REGISTRY.counter("sim_cache_misses_total")
 
     @staticmethod
     def key(engine: "Engine", mod: SimModule,
@@ -327,10 +337,12 @@ class SimulationCache:
         rep = self._reports.get(key)
         if rep is not None:
             self.hits += 1
+            self._hits_ctr.inc()
         return rep
 
     def store(self, key: tuple, mod: SimModule, report: SimReport) -> None:
         self.misses += 1
+        self._misses_ctr.inc()
         self._modules[id(mod)] = mod
         self._reports[key] = report
 
@@ -433,7 +445,8 @@ class Engine:
                 return cached
 
         if self.scheduler == "legacy":
-            report = self._walk_simulate(mod, window, record=False)[0]
+            with TRACER.span("engine.walk", module=mod.entry, legacy=True):
+                report = self._walk_simulate(mod, window, record=False)[0]
             if cache is not None:
                 cache.store(cache_key, mod, report)
             return report
@@ -458,9 +471,11 @@ class Engine:
                     self._tapes[id(mod)] = tape
                     self._tape_mods[id(mod)] = mod
         if tape is not None:
-            report = fastsched.replay(tape, self, window)
+            with TRACER.span("fastsched.replay", module=mod.entry):
+                report = fastsched.replay(tape, self, window)
         else:
-            report, tape = self._walk_simulate(mod, window, record=True)
+            with TRACER.span("engine.record", module=mod.entry):
+                report, tape = self._walk_simulate(mod, window, record=True)
             self._tapes[id(mod)] = tape
             self._tape_mods[id(mod)] = mod
             if cache is not None:
@@ -687,7 +702,8 @@ class Engine:
                         overhead_s=ot.overhead_s,
                         channel_bytes=mo.channel_bytes if mo else None,
                         spill_bytes=float(mo.spill_bytes) if mo else 0.0,
-                        link_bytes=ot.link_bytes))
+                        link_bytes=ot.link_bytes,
+                        link_seconds=ot.link_seconds))
                 self._account(ot, scale, tot, unit_seconds, link_busy)
                 if mo is not None:
                     mem.account(mo, scale)

@@ -202,7 +202,8 @@ def replay(tape: ModuleTape, engine, window: Optional[Tuple[int, int]]):
                         op.name, op.opcode, unit, start, ot.seconds, scale,
                         ot.flops, ot.hbm_bytes, ot.ici_bytes, comp_name,
                         overhead_s=ot.overhead_s, channel_bytes=cbytes,
-                        spill_bytes=spill, link_bytes=ot.link_bytes))
+                        spill_bytes=spill, link_bytes=ot.link_bytes,
+                        link_seconds=ot.link_seconds))
                 tot["flops"] += ot.flops * scale
                 tot["hbm"] += ot.hbm_bytes * scale
                 tot["ici"] += ot.ici_bytes * scale
@@ -347,10 +348,15 @@ def reprice_ici(tape: ModuleTape, mod, hw, fabric) -> Optional[ModuleTape]:
                 out.append(st)
         return out
 
-    try:
-        steps = redo(tape.steps)
-    except _UnitFlip:
-        return None
+    from repro.obs.metrics import REGISTRY
+    from repro.obs.trace import TRACER
+    with TRACER.span("fastsched.reprice_ici"):
+        try:
+            steps = redo(tape.steps)
+        except _UnitFlip:
+            REGISTRY.counter("tape_reprice_fallbacks_total").inc()
+            return None
+    REGISTRY.counter("tape_reprices_total").inc()
     return ModuleTape(steps, tape.root_slot, tape.last_slots, tape.n_slots,
                       tape.has_mem, tape.mem_peak, tape.mem_channel_busy,
                       tape.memmap)

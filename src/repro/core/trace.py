@@ -6,10 +6,10 @@ tracks on top of the same events.
 """
 from __future__ import annotations
 
-import json
 from typing import Dict, List
 
 from repro.core.engine import SimReport
+from repro.obs.export import duration_event, trace_json
 
 #: chrome-trace thread id per bottleneck unit
 LANES: Dict[str, int] = {"mxu": 0, "vpu": 1, "hbm": 2, "ici": 3,
@@ -20,26 +20,20 @@ def op_events(report: SimReport) -> List[dict]:
     """One ``ph: X`` duration event per timeline entry, laned by unit."""
     events = []
     for e in report.timeline:
-        events.append({
-            "name": f"{e.opcode}:{e.name}"
-                    + (f" x{int(e.scale)}" if e.scale > 1 else ""),
-            "cat": e.unit,
-            "ph": "X",
-            "ts": e.start * 1e6,
-            "dur": max(e.duration * e.scale * 1e6, 0.01),
-            "pid": 0,
-            "tid": LANES.get(e.unit, 5),
-            "args": {"flops": e.flops, "hbm_bytes": e.hbm_bytes,
-                     "ici_bytes": e.ici_bytes, "scale": e.scale,
-                     "overhead_s": e.overhead_s, "exposed_s": e.exposed_s,
-                     "comp": e.comp},
-        })
+        events.append(duration_event(
+            f"{e.opcode}:{e.name}"
+            + (f" x{int(e.scale)}" if e.scale > 1 else ""),
+            e.unit, e.start, e.duration * e.scale,
+            tid=LANES.get(e.unit, 5),
+            args={"flops": e.flops, "hbm_bytes": e.hbm_bytes,
+                  "ici_bytes": e.ici_bytes, "scale": e.scale,
+                  "overhead_s": e.overhead_s, "exposed_s": e.exposed_s,
+                  "comp": e.comp}))
     return events
 
 
 def to_chrome_trace(report: SimReport) -> str:
-    return json.dumps({"traceEvents": op_events(report),
-                       "displayTimeUnit": "ns"})
+    return trace_json(op_events(report))
 
 
 def to_csv(report: SimReport) -> str:

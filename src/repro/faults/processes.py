@@ -92,6 +92,8 @@ class PlannedFailures(FailureProcess):
     outages: Sequence[Outage] = ()
 
     def _for(self, kind: str, key: str) -> Iterator[Tuple[float, float]]:
+        from repro.obs.metrics import REGISTRY
+        drawn = REGISTRY.counter("faults_outages_drawn_total", kind=kind)
         mine = sorted((o for o in self.outages
                        if o.kind == kind and o.key == key),
                       key=lambda o: o.fail_s)
@@ -100,6 +102,7 @@ class PlannedFailures(FailureProcess):
             if o.fail_s < last:
                 raise ValueError(f"overlapping outages for {kind} {key}")
             last = o.repair_s
+            drawn.inc()
             yield (o.fail_s, o.repair_s)
 
     def device_schedule(self, device_id: str) -> Iterator[Tuple[float, float]]:
@@ -154,6 +157,8 @@ class StochasticFailures(FailureProcess):
                  ) -> Iterator[Tuple[float, float]]:
         if not math.isfinite(mtbf):
             return
+        from repro.obs.metrics import REGISTRY
+        drawn = REGISTRY.counter("faults_outages_drawn_total", kind=kind)
         rng = random.Random(f"{self.seed}|{kind}|{key}")
         # per-stream constants hoisted out of the draw loop (the weibull
         # scale hides a gamma-function evaluation); the drawn sequence is
@@ -169,6 +174,7 @@ class StochasticFailures(FailureProcess):
             t += rng.weibullvariate(scale, shape) if weibull \
                 else rng.expovariate(inv_mtbf)
             down = rng.expovariate(inv_mttr) if inv_mttr is not None else 0.0
+            drawn.inc()
             yield (t, t + down)
             t += down
 

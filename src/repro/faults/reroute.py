@@ -56,12 +56,21 @@ def gang_dilation(topo: Topology, members: Sequence[int],
 @lru_cache(maxsize=4096)
 def _dilation_cached(topo: Topology, members: Tuple[int, ...],
                      broken: frozenset, hw: HardwareSpec) -> float:
-    healthy = lower_collective("all-reduce", PROBE_BYTES, members, topo, hw)
-    if healthy.seconds <= 0:
-        return 1.0
-    try:
-        degraded = lower_collective("all-reduce", PROBE_BYTES, members, topo,
-                                    hw, broken=broken)
-    except ValueError:
-        return float(len(members))
-    return max(degraded.seconds / healthy.seconds, 1.0)
+    # behind the lru_cache: the span/counter record probe computations
+    # actually performed, not memoized re-asks
+    from repro.obs.metrics import REGISTRY
+    from repro.obs.trace import TRACER
+    REGISTRY.counter("faults_dilation_probes_total").inc()
+    with TRACER.span("faults.gang_dilation", gang=len(members),
+                     broken_links=len(broken)):
+        healthy = lower_collective("all-reduce", PROBE_BYTES, members, topo,
+                                   hw)
+        if healthy.seconds <= 0:
+            return 1.0
+        try:
+            degraded = lower_collective("all-reduce", PROBE_BYTES, members,
+                                        topo, hw, broken=broken)
+        except ValueError:
+            REGISTRY.counter("faults_gang_partitions_total").inc()
+            return float(len(members))
+        return max(degraded.seconds / healthy.seconds, 1.0)

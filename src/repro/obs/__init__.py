@@ -1,0 +1,75 @@
+"""repro.obs — cross-layer observability: spans, metrics, time-lapse, diff.
+
+The paper's central methodological tool is AerialVision: per-interval
+time-lapse plots that exposed cuDNN's "many varying phases" and
+partition-bank camping where aggregate counters showed nothing (§IV-V).
+This package is that methodology applied to the whole simulator stack:
+
+* :mod:`repro.obs.trace`     — hierarchical span tracer (the simulator's
+  own wall-clock flight recorder, instrumented through engine /
+  fastsched / cluster / topology / faults);
+* :mod:`repro.obs.metrics`   — labeled counter/gauge/histogram registry
+  absorbing the previously scattered counters, plus the shared
+  :class:`~repro.obs.metrics.StageTimer` both CLIs use;
+* :mod:`repro.obs.export`    — the one Chrome Trace Event Format helper
+  set (and the shared ASCII shade ramp), so engine, fleet, span, and
+  time-lapse tracks compose into one trace file;
+* :mod:`repro.obs.timelapse` — AerialVision-style fixed-interval series
+  (unit occupancy, channel-camping index, link utilization, queue
+  depth) derived from existing timelines, reconciling to report totals;
+* :mod:`repro.obs.manifest` / :mod:`repro.obs.diff` — run manifests and
+  the ``python -m repro.obs diff`` regression attributor.
+
+Import structure note: ``trace``/``metrics``/``export`` are
+dependency-free and imported eagerly — the engine and cluster layers
+import them at module load.  ``timelapse``/``manifest``/``diff`` reach
+back *into* those layers (analysis/cluster), so they are exposed lazily
+via module ``__getattr__`` to keep the import graph acyclic.
+"""
+from __future__ import annotations
+
+from repro.obs.export import (SHADES, counter_event, duration_event,
+                              instant_event, shade, thread_meta, trace_json)
+from repro.obs.metrics import (REGISTRY, Counter, Gauge, Histogram,
+                               MetricsRegistry, StageTimer)
+from repro.obs.trace import SELF_PID, SpanRecord, SpanTracer, TRACER
+
+#: lazily-resolved symbols -> defining submodule (these import analysis /
+#: cluster, which import the engine, which imports repro.obs.trace — an
+#: eager import here would be circular)
+_LAZY = {
+    "TimeLapse": "repro.obs.timelapse",
+    "LapseInterval": "repro.obs.timelapse",
+    "CAMPED_THRESHOLD": "repro.obs.timelapse",
+    "RunManifest": "repro.obs.manifest",
+    "engine_manifest": "repro.obs.manifest",
+    "cluster_manifest": "repro.obs.manifest",
+    "ManifestDiff": "repro.obs.diff",
+    "MetricDelta": "repro.obs.diff",
+    "diff_manifests": "repro.obs.diff",
+    "metric_layer": "repro.obs.diff",
+}
+
+
+def __getattr__(name: str):
+    mod_name = _LAZY.get(name)
+    if mod_name is None:
+        raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod_name), name)
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))
+
+
+__all__ = [
+    "TRACER", "SpanTracer", "SpanRecord", "SELF_PID",
+    "REGISTRY", "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "StageTimer",
+    "SHADES", "shade", "thread_meta", "duration_event", "counter_event",
+    "instant_event", "trace_json",
+    "TimeLapse", "LapseInterval", "CAMPED_THRESHOLD",
+    "RunManifest", "engine_manifest", "cluster_manifest",
+    "ManifestDiff", "MetricDelta", "diff_manifests", "metric_layer",
+]

@@ -1,0 +1,67 @@
+"""CLI: compare two run manifests and attribute the regression.
+
+    PYTHONPATH=src python -m repro.obs diff a.json b.json
+
+Exit codes (relied on by the CI smoke step):
+
+* 0 — manifests are indistinguishable (the same-seed self-diff case);
+* 3 — the runs diverged (config / seed / metric / time-lapse changes
+  found — the "a knob changed" case);
+* 2 — usage or load error (missing file, malformed manifest,
+  engine-vs-cluster kind mismatch).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Observability toolbox for repro run artifacts.")
+    sub = p.add_subparsers(dest="command", required=True)
+    d = sub.add_parser(
+        "diff", help="compare two --manifest JSONs and attribute "
+                     "which layer/metric/interval diverged")
+    d.add_argument("a", help="baseline manifest JSON path")
+    d.add_argument("b", help="candidate manifest JSON path")
+    d.add_argument("--rel-tol", type=float, default=1e-9,
+                   help="relative tolerance below which a metric delta "
+                        "is noise (default 1e-9: deterministic sims "
+                        "must match exactly)")
+    d.add_argument("--top", type=int, default=12,
+                   help="rows shown per section in the text report")
+    d.add_argument("--json", action="store_true",
+                   help="emit the structured diff document instead of text")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    from repro.obs.diff import diff_manifests
+    from repro.obs.manifest import RunManifest
+
+    try:
+        a = RunManifest.load(args.a)
+        b = RunManifest.load(args.b)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"error loading manifest: {e}", file=sys.stderr)
+        return 2
+
+    d = diff_manifests(a, b, rel_tol=args.rel_tol)
+    try:
+        if args.json:
+            print(json.dumps(d.to_doc(), indent=2))
+        else:
+            print(d.render(top=args.top))
+    except BrokenPipeError:     # `... | head` closed stdout; not an error
+        sys.stderr.close()      # suppress the interpreter's flush warning
+    if d.kind_mismatch:
+        return 2
+    return 0 if d.empty else 3
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,265 @@
+"""Manifest diffing: the regression attributor behind ``repro.obs diff``.
+
+Given two :class:`~repro.obs.manifest.RunManifest` files, report *what*
+changed (config knobs), *how much* each metric moved, *which simulator
+layer* each moved metric belongs to (engine / memory / topology /
+cluster / faults — inferred from the metric name), and *where in time*
+the runs diverged (the first / worst time-lapse intervals whose series
+disagree).  This is the paper's time-lapse methodology turned into a
+regression tool: instead of eyeballing two AerialVision plots, the diff
+names the interval and the series that moved.
+
+Exit-code contract (used by the CI smoke step): identical manifests diff
+empty; a single-knob change (``--policy fifo`` vs ``sjf``) must surface
+that knob under config changes and the affected metrics under deltas.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.obs.manifest import RunManifest
+
+#: metric-name prefixes/substrings -> owning simulator layer, first match
+#: wins (order matters: "exposed_ici_seconds" is topology, not engine)
+_LAYER_RULES: Tuple[Tuple[str, str], ...] = (
+    ("channel_", "memory"), ("peak_hbm", "memory"), ("spill_", "memory"),
+    ("hbm_utilization", "memory"),
+    ("link_", "topology"), ("ici_seconds", "topology"),
+    ("exposed_ici", "topology"), ("total_ici_bytes", "topology"),
+    ("unit_ici", "topology"),
+    ("failure", "faults"), ("recover", "faults"), ("checkpoint", "faults"),
+    ("restore", "faults"), ("lost_work", "faults"), ("reshape", "faults"),
+    ("goodput", "faults"),
+    ("queue", "cluster"), ("latency", "cluster"), ("hol_", "cluster"),
+    ("makespan", "cluster"), ("fleet_", "cluster"), ("cache_", "cluster"),
+    ("utilization", "cluster"), ("num_devices", "cluster"),
+    ("num_jobs", "cluster"), ("preempt", "cluster"),
+    ("cold_start", "cluster"),
+)
+
+
+def metric_layer(name: str) -> str:
+    """Which simulator layer owns a summary metric, by naming convention."""
+    for needle, layer in _LAYER_RULES:
+        if needle in name:
+            return layer
+    return "engine"
+
+
+def _rel(a: float, b: float) -> float:
+    """Relative delta; ±inf for a zero baseline (0 -> nonzero)."""
+    if a == 0.0:
+        return 0.0 if b == 0.0 else math.copysign(math.inf, b)
+    return (b - a) / abs(a)
+
+
+def _fmt_rel(rel: float) -> str:
+    return f"{rel:+.2%}" if math.isfinite(rel) else "was 0"
+
+
+@dataclass
+class MetricDelta:
+    """One summary metric that moved between the two runs."""
+
+    name: str
+    a: float
+    b: float
+    layer: str
+
+    @property
+    def abs_delta(self) -> float:
+        return self.b - self.a
+
+    @property
+    def rel_delta(self) -> float:
+        """(b - a) / |a|; ±inf when the baseline is exactly zero."""
+        return _rel(self.a, self.b)
+
+    def render(self) -> str:
+        return (f"{self.name:<40s} {self.a:>14.6g} -> {self.b:<14.6g} "
+                f"({_fmt_rel(self.rel_delta)}) [{self.layer}]")
+
+
+@dataclass
+class LapseDivergence:
+    """One time-lapse interval/series where the two runs disagree."""
+
+    index: int
+    t0: float
+    series: str                  # e.g. "busy_mxu", "queue_depth"
+    a: float
+    b: float
+
+    @property
+    def rel_delta(self) -> float:
+        return _rel(self.a, self.b)
+
+    def render(self) -> str:
+        return (f"interval {self.index:>4d} @ {self.t0:.4g}s  "
+                f"{self.series:<24s} {self.a:.6g} -> {self.b:.6g} "
+                f"({_fmt_rel(self.rel_delta)})")
+
+
+@dataclass
+class ManifestDiff:
+    """Structured comparison of two run manifests."""
+
+    a_label: str
+    b_label: str
+    identical_digest: bool
+    kind_mismatch: Optional[Tuple[str, str]] = None
+    config_changes: Dict[str, Tuple[Any, Any]] = field(default_factory=dict)
+    seed_changes: Dict[str, Tuple[Any, Any]] = field(default_factory=dict)
+    metric_deltas: List[MetricDelta] = field(default_factory=list)
+    lapse_divergences: List[LapseDivergence] = field(default_factory=list)
+
+    @property
+    def empty(self) -> bool:
+        """True when the runs are indistinguishable (the self-diff case)."""
+        return (self.kind_mismatch is None and not self.config_changes
+                and not self.seed_changes and not self.metric_deltas
+                and not self.lapse_divergences)
+
+    def layers(self) -> Dict[str, int]:
+        """Moved-metric count per simulator layer (the attribution)."""
+        out: Dict[str, int] = {}
+        for d in self.metric_deltas:
+            out[d.layer] = out.get(d.layer, 0) + 1
+        return out
+
+    def to_doc(self) -> Dict[str, Any]:
+        return {
+            "a": self.a_label, "b": self.b_label, "empty": self.empty,
+            "identical_digest": self.identical_digest,
+            "kind_mismatch": list(self.kind_mismatch)
+            if self.kind_mismatch else None,
+            "config_changes": {k: list(v)
+                               for k, v in self.config_changes.items()},
+            "seed_changes": {k: list(v)
+                             for k, v in self.seed_changes.items()},
+            "layers": self.layers(),
+            "metric_deltas": [{
+                "name": d.name, "a": d.a, "b": d.b, "layer": d.layer,
+                "abs_delta": d.abs_delta,
+                # None, not Infinity: keep the doc strict-JSON
+                "rel_delta": d.rel_delta
+                if math.isfinite(d.rel_delta) else None,
+            } for d in self.metric_deltas],
+            "lapse_divergences": [{
+                "index": d.index, "t0": d.t0, "series": d.series,
+                "a": d.a, "b": d.b,
+                "rel_delta": d.rel_delta
+                if math.isfinite(d.rel_delta) else None,
+            } for d in self.lapse_divergences],
+        }
+
+    def render(self, top: int = 12) -> str:
+        lines = [f"diff: {self.a_label!r} vs {self.b_label!r}"]
+        if self.kind_mismatch:
+            lines.append(f"  KIND MISMATCH: {self.kind_mismatch[0]} vs "
+                         f"{self.kind_mismatch[1]} — not comparable")
+            return "\n".join(lines)
+        if self.empty:
+            lines.append("  identical: no config, seed, metric, or "
+                         "time-lapse differences")
+            return "\n".join(lines)
+        if self.config_changes:
+            lines.append("  config changes:")
+            for k, (va, vb) in sorted(self.config_changes.items()):
+                lines.append(f"    {k:<24s} {va!r} -> {vb!r}")
+        if self.seed_changes:
+            lines.append("  seed changes:")
+            for k, (va, vb) in sorted(self.seed_changes.items()):
+                lines.append(f"    {k:<24s} {va!r} -> {vb!r}")
+        if self.metric_deltas:
+            layers = ", ".join(f"{l}: {n}"
+                               for l, n in sorted(self.layers().items()))
+            lines.append(f"  metric deltas ({len(self.metric_deltas)} "
+                         f"moved; by layer — {layers}):")
+            for d in self.metric_deltas[:top]:
+                lines.append("    " + d.render())
+            if len(self.metric_deltas) > top:
+                lines.append(f"    ... {len(self.metric_deltas) - top} "
+                             f"more (use --top)")
+        if self.lapse_divergences:
+            lines.append(f"  time-lapse divergences "
+                         f"({len(self.lapse_divergences)} intervals; "
+                         f"first/worst shown):")
+            for d in self.lapse_divergences[:top]:
+                lines.append("    " + d.render())
+            if len(self.lapse_divergences) > top:
+                lines.append(f"    ... {len(self.lapse_divergences) - top} "
+                             f"more")
+        return "\n".join(lines)
+
+
+def _lapse_series(doc: Dict[str, Any]) -> Dict[int, Dict[str, float]]:
+    """Flatten a TimeLapse doc into {interval: {series: value}}."""
+    out: Dict[int, Dict[str, float]] = {}
+    for i, iv in enumerate(doc.get("intervals", [])):
+        row: Dict[str, float] = {}
+        for k, v in iv.get("busy_seconds", {}).items():
+            row[f"busy_{k}"] = v
+        for c, v in enumerate(iv.get("channel_busy", [])):
+            row[f"channel_{c}"] = v
+        for l, v in iv.get("link_busy", {}).items():
+            row[f"link_{l}"] = v
+        if iv.get("camping_seconds"):
+            row["camping_seconds"] = iv["camping_seconds"]
+        if iv.get("queue_depth"):
+            row["queue_depth"] = iv["queue_depth"]
+        out[i] = row
+    return out
+
+
+def diff_manifests(a: RunManifest, b: RunManifest,
+                   rel_tol: float = 1e-9,
+                   abs_tol: float = 1e-12) -> ManifestDiff:
+    """Compare two manifests; values within tolerance are *not* reported.
+
+    ``rel_tol`` is deliberately tiny by default: the simulators are
+    deterministic, so a same-seed same-knob pair must diff empty without
+    any forgiveness window, while FP-noise-level differences between
+    hosts can be absorbed by raising it (``--rel-tol``).
+    """
+    d = ManifestDiff(a.label or "a", b.label or "b",
+                     identical_digest=(a.digest == b.digest))
+    if a.kind != b.kind:
+        d.kind_mismatch = (a.kind, b.kind)
+        return d
+
+    def _close(va: float, vb: float) -> bool:
+        return abs(vb - va) <= max(abs_tol, rel_tol * max(abs(va), abs(vb)))
+
+    for k in sorted(set(a.config) | set(b.config)):
+        va, vb = a.config.get(k), b.config.get(k)
+        if va != vb:
+            d.config_changes[k] = (va, vb)
+    for k in sorted(set(a.seeds) | set(b.seeds)):
+        va, vb = a.seeds.get(k), b.seeds.get(k)
+        if va != vb:
+            d.seed_changes[k] = (va, vb)
+
+    for k in sorted(set(a.metrics) | set(b.metrics)):
+        va, vb = a.metrics.get(k, 0.0), b.metrics.get(k, 0.0)
+        if not _close(va, vb):
+            d.metric_deltas.append(MetricDelta(k, va, vb, metric_layer(k)))
+    d.metric_deltas.sort(key=lambda m: abs(m.rel_delta), reverse=True)
+
+    if a.timelapse and b.timelapse:
+        sa, sb = _lapse_series(a.timelapse), _lapse_series(b.timelapse)
+        for i in sorted(set(sa) | set(sb)):
+            ra, rb = sa.get(i, {}), sb.get(i, {})
+            t0 = (a.timelapse.get("intervals", [{}] * (i + 1))[i]
+                  .get("t0", 0.0)) if i < len(
+                a.timelapse.get("intervals", [])) else 0.0
+            for series in sorted(set(ra) | set(rb)):
+                va, vb = ra.get(series, 0.0), rb.get(series, 0.0)
+                if not _close(va, vb):
+                    d.lapse_divergences.append(
+                        LapseDivergence(i, t0, series, va, vb))
+        d.lapse_divergences.sort(
+            key=lambda x: (abs(x.rel_delta), x.index), reverse=True)
+    return d

@@ -321,7 +321,25 @@ def _build_plan(kind: str, members: Tuple[int, ...], topo: Topology,
 
     Exceptions (``ValueError`` on a partitioned fabric) propagate and are
     NOT cached by ``lru_cache``, so a later retry with healed links works.
+
+    The span/counter fire on cache MISSES only (this function sits behind
+    the ``lru_cache``), so the flight recorder sees exactly the lowering
+    work actually performed, not the memoized lookups.
     """
+    from repro.obs.metrics import REGISTRY
+    from repro.obs.trace import TRACER
+    REGISTRY.counter("topology_plan_builds_total", kind=kind).inc()
+    with TRACER.span("topology.lower", kind=kind, group=len(members),
+                     algorithm=algorithm or "auto",
+                     degraded=bool(broken)):
+        return _build_plan_impl(kind, members, topo, algorithm, pairs,
+                                broken)
+
+
+def _build_plan_impl(kind: str, members: Tuple[int, ...], topo: Topology,
+                     algorithm: Optional[str],
+                     pairs: Optional[Tuple[Tuple[int, int], ...]],
+                     broken: Optional[frozenset]) -> _Plan:
     g = len(members)
     pos_by_id = {dev: pos for pos, dev in enumerate(topo.ids)}
     positions = [pos_by_id[m] for m in members]

@@ -28,7 +28,7 @@ WORKLOADS = [
 ]
 
 
-def _capture_summary(arch: str, seq_len: int, global_batch: int) -> dict:
+def _capture_report(arch: str, seq_len: int, global_batch: int):
     from repro import config as C
     from repro.core import Simulator
     from repro.runtime.steps import train_bundle
@@ -39,7 +39,11 @@ def _capture_summary(arch: str, seq_len: int, global_batch: int) -> dict:
     rc = C.RunConfig(model=entry.smoke, shape=shape, mesh=C.SMOKE_MESH)
     sim = Simulator()
     cap = sim.capture_bundle(train_bundle(rc), name=f"{arch}_golden")
-    return sim.performance(cap).summary()
+    return sim.performance(cap)
+
+
+def _capture_summary(arch: str, seq_len: int, global_batch: int) -> dict:
+    return _capture_report(arch, seq_len, global_batch).summary()
 
 
 @pytest.mark.parametrize("name,arch,seq_len,batch", WORKLOADS,
@@ -66,6 +70,62 @@ def test_summary_matches_golden(name, arch, seq_len, batch, update_golden):
         f"{name}: summary drifted from golden (expected, got): {drift} — "
         f"if this change is intended, rerun with --update-golden and "
         f"review the JSON diff")
+
+
+def _approx_tree(got, want, path, drift):
+    """Recursive numeric compare; records (path, expected, got) mismatches."""
+    if isinstance(want, dict):
+        if not isinstance(got, dict) or set(got) != set(want):
+            drift[path] = (want, got)
+            return
+        for k in want:
+            _approx_tree(got[k], want[k], f"{path}.{k}", drift)
+    elif isinstance(want, list):
+        if not isinstance(got, list) or len(got) != len(want):
+            drift[path] = (want, got)
+            return
+        for i, (g, w) in enumerate(zip(got, want)):
+            _approx_tree(g, w, f"{path}[{i}]", drift)
+    elif isinstance(want, float) or isinstance(got, float):
+        if got != pytest.approx(want, rel=1e-6, abs=1e-18):
+            drift[path] = (want, got)
+    elif got != want:
+        drift[path] = (want, got)
+
+
+def test_lenet_timelapse_matches_golden(update_golden):
+    """Pins the AerialVision time-lapse of the lenet train step: 64-interval
+    per-unit occupancy, per-channel busy seconds, and the camping markers.
+    The structural acceptance criteria are asserted directly (interval sums
+    reconcile with the SimReport within 1%; intervals carrying the
+    dynamic-update-slice camping ops read an elevated channel-imbalance
+    index); the snapshot then freezes the exact interval values."""
+    from repro.obs.timelapse import TimeLapse
+
+    rep = _capture_report("lenet", 32, 8)
+    lapse = TimeLapse.from_report(rep, num_intervals=64, label="lenet")
+    assert lapse.reconcile() < 0.01
+    camp = [iv.channel_imbalance for iv in lapse.intervals
+            if iv.camping_seconds > 0]
+    flat = [iv.channel_imbalance for iv in lapse.intervals
+            if iv.camping_seconds == 0 and sum(iv.channel_busy) > 0]
+    assert camp and flat and max(camp) > max(flat)
+
+    got = lapse.to_doc()
+    path = GOLDEN_DIR / "lenet_timelapse.json"
+    if update_golden:
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps(got, indent=2, sort_keys=True) + "\n")
+    assert path.exists(), (
+        f"no golden snapshot at {path}; create it with "
+        f"pytest tests/test_golden.py --update-golden")
+    want = json.loads(path.read_text())
+    drift = {}
+    _approx_tree(got, want, "lapse", drift)
+    assert not drift, (
+        f"lenet time-lapse drifted from golden (expected, got): "
+        f"{dict(list(drift.items())[:8])} — if this change is intended, "
+        f"rerun with --update-golden and review the JSON diff")
 
 
 def _cluster_faults_summary() -> dict:

@@ -1,0 +1,510 @@
+"""repro.obs tests: span tracer semantics (null-span fast path, ring
+capacity, hierarchy), metrics registry (labels, kind conflicts, histograms,
+StageTimer), time-lapse conservation on real lenet and cluster runs (the
+acceptance bar: interval sums reconcile with report totals within 1%),
+the partition-camping structure of the lenet lapse, manifest round-trips,
+and the `repro.obs diff` regression attributor incl. CLI exit codes."""
+import json
+import math
+import statistics
+
+import pytest
+
+from repro.core import Engine, parse_hlo_module
+from repro.obs.diff import (LapseDivergence, MetricDelta, diff_manifests,
+                            metric_layer)
+from repro.obs.export import (counter_event, duration_event, instant_event,
+                              shade, thread_meta, trace_json)
+from repro.obs.manifest import (RunManifest, cluster_manifest,
+                                engine_manifest)
+from repro.obs.metrics import (REGISTRY, MetricsRegistry, StageTimer)
+from repro.obs.timelapse import CAMPED_THRESHOLD, TimeLapse
+from repro.obs.trace import SELF_PID, SpanTracer, _NULL_SPAN
+
+# ---------------------------------------------------------------------------
+# fixtures: one real engine run, one real fleet run, both module-scoped
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def lenet_report():
+    from repro import config as C
+    from repro.core import Simulator
+    from repro.runtime.steps import train_bundle
+
+    entry = C.get("lenet")
+    shape = C.ShapeConfig("obs", seq_len=32, global_batch=8, kind="train")
+    rc = C.RunConfig(model=entry.smoke, shape=shape, mesh=C.SMOKE_MESH)
+    sim = Simulator()
+    cap = sim.capture_bundle(train_bundle(rc), name="lenet_obs")
+    return sim.performance(cap)
+
+
+def _cluster_run(policy: str):
+    from repro.cluster import ClusterSim, Fleet, TableCostModel, make_policy
+    from repro.cluster.workload import synthetic_trace
+
+    trace = synthetic_trace("synthetic:bursty", n_jobs=30, seed=7)
+    table = {c.name: (0.05 * c.cost_scale, 2e9) for c in trace.classes}
+    sim = ClusterSim(Fleet.from_spec("2"), TableCostModel(table),
+                     make_policy(policy))
+    return sim.run(trace)
+
+
+@pytest.fixture(scope="module")
+def cluster_report():
+    return _cluster_run("fifo")
+
+
+# ---------------------------------------------------------------------------
+# span tracer
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_tracer_returns_shared_null_span():
+    tr = SpanTracer()
+    assert tr.span("x") is _NULL_SPAN
+    assert tr.span("y", a=1) is _NULL_SPAN
+    tr.instant("z")
+    with tr.span("x"):
+        pass
+    assert tr.records == [] and tr.dropped == 0
+
+
+def test_span_hierarchy_depth_and_parent():
+    tr = SpanTracer().enable()
+    with tr.span("outer"):
+        with tr.span("inner", k=2):
+            tr.instant("mark")
+    # completion order: instant, inner, outer
+    names = [r.name for r in tr.records]
+    assert names == ["mark", "inner", "outer"]
+    by = {r.name: r for r in tr.records}
+    assert by["outer"].depth == 0 and by["outer"].parent is None
+    assert by["inner"].depth == 1 and by["inner"].parent == "outer"
+    assert by["inner"].attrs == {"k": 2}
+    assert by["mark"].depth == 2 and by["mark"].parent == "inner"
+    assert by["mark"].duration_s == 0.0
+    assert by["outer"].duration_s >= by["inner"].duration_s >= 0.0
+
+
+def test_ring_capacity_and_dropped():
+    tr = SpanTracer(capacity=8).enable()
+    for i in range(20):
+        tr.instant(f"i{i}")
+    assert len(tr.records) == 8
+    assert tr.dropped == 12
+    assert [r.name for r in tr.records] == [f"i{i}" for i in range(12, 20)]
+    drained = tr.drain()
+    assert len(drained) == 8 and tr.records == []
+    with pytest.raises(ValueError):
+        SpanTracer(capacity=0)
+
+
+def test_tracer_summary_totals_and_clear():
+    tr = SpanTracer().enable()
+    with tr.span("a"):
+        pass
+    with tr.span("a"):
+        pass
+    with tr.span("b"):
+        pass
+    summ = tr.summary()
+    assert summ["a"][0] == 2 and summ["b"][0] == 1
+    assert tr.total_seconds("a") == pytest.approx(summ["a"][1])
+    tr.clear()
+    assert tr.records == [] and tr.dropped == 0
+
+
+def test_tracer_chrome_events_compose_on_self_pid():
+    tr = SpanTracer().enable()
+    with tr.span("outer"):
+        tr.instant("ping", who="test")
+    evs = tr.to_chrome_events()
+    assert all(e["pid"] == SELF_PID for e in evs)
+    metas = [e for e in evs if e["ph"] == "M"]
+    assert {m["args"]["name"] for m in metas} == {"spans/depth0",
+                                                 "spans/depth1"}
+    kinds = {e["ph"] for e in evs}
+    assert "X" in kinds and "i" in kinds
+    inst = next(e for e in evs if e["ph"] == "i")
+    assert inst["args"] == {"who": "test", "parent": "outer"}
+    assert SpanTracer().to_chrome_events() == []
+
+
+def test_engine_simulate_records_span_and_cache_counters():
+    from repro.core.engine import SimulationCache
+    from repro.obs.trace import TRACER
+
+    mod = parse_hlo_module(_CAMPING_HLO)
+    cache = SimulationCache()
+    eng = Engine(cache=cache)
+    h0 = REGISTRY.value("sim_cache_hits_total")
+    m0 = REGISTRY.value("sim_cache_misses_total")
+    TRACER.enable()
+    TRACER.clear()
+    try:
+        eng.simulate(mod)       # miss
+        eng.simulate(mod)       # hit
+    finally:
+        TRACER.disable()
+    assert REGISTRY.value("sim_cache_misses_total") == m0 + 1
+    assert REGISTRY.value("sim_cache_hits_total") == h0 + 1
+    names = [r.name for r in TRACER.drain()]
+    assert any(n in ("engine.record", "engine.walk") for n in names)
+
+
+def test_cluster_run_records_span_and_publishes_metrics():
+    from repro.obs.trace import TRACER
+
+    TRACER.enable()
+    TRACER.clear()
+    try:
+        rep = _cluster_run("sjf")
+    finally:
+        TRACER.disable()
+    spans = {r.name: r for r in TRACER.drain()}
+    assert "cluster.run" in spans
+    assert spans["cluster.run"].attrs["policy"] == "sjf"
+    assert REGISTRY.value("cluster_runs_total", policy="sjf") >= 1
+    assert REGISTRY.value("cluster_events_total",
+                          policy="sjf") >= rep.events_processed
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_labels_and_monotonicity():
+    reg = MetricsRegistry()
+    reg.counter("hits").inc()
+    reg.counter("hits").inc(2.0)
+    reg.counter("hits", policy="sjf").inc(5)
+    assert reg.value("hits") == 3.0
+    assert reg.value("hits", policy="sjf") == 5.0
+    assert reg.value("absent") == 0.0 and reg.get("absent") is None
+    with pytest.raises(ValueError):
+        reg.counter("hits").inc(-1)
+    assert len(reg) == 2
+
+
+def test_kind_conflict_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+    with pytest.raises(TypeError):
+        reg.histogram("x")
+
+
+def test_gauge_and_histogram():
+    reg = MetricsRegistry()
+    g = reg.gauge("depth")
+    g.set(4.0)
+    g.inc()
+    g.dec(2.0)
+    assert reg.value("depth") == 3.0
+    h = reg.histogram("lat", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 0.5, 5.0):
+        h.observe(v)
+    assert h.count == 4 and h.sum == pytest.approx(6.05)
+    assert h.mean == pytest.approx(6.05 / 4)
+    assert h.min == 0.05 and h.max == 5.0
+    assert h.bucket_counts == [1, 2, 1]      # <=0.1, <=1.0, +inf
+    d = h.to_dict()
+    assert d["buckets"] == {"0.1": 1, "1.0": 2, "+inf": 1}
+
+
+def test_snapshot_renders_prometheus_style_keys():
+    reg = MetricsRegistry()
+    reg.counter("runs_total", policy="sjf", trace="bursty").inc()
+    reg.gauge("depth").set(2)
+    snap = reg.snapshot()
+    assert snap["runs_total{policy=sjf,trace=bursty}"] == 1.0
+    assert snap["depth"] == 2.0
+    assert json.loads(reg.to_json())
+    reg.clear()
+    assert len(reg) == 0 and reg.snapshot() == {}
+
+
+def test_stage_timer_accumulates_and_renders():
+    reg = MetricsRegistry()
+    t = StageTimer("testcli", registry=reg)
+    t.mark("setup")
+    t.mark("run")
+    t.mark("run")
+    assert set(t.stage_seconds) == {"setup", "run"}
+    assert t.total_seconds == pytest.approx(sum(t.stage_seconds.values()))
+    h = reg.get("stage_seconds", cli="testcli", stage="run")
+    assert h is not None and h.count == 2
+    out = t.render()
+    assert out.startswith("self-profile (wall-clock):")
+    assert "setup" in out and "run" in out and "total" in out
+
+
+# ---------------------------------------------------------------------------
+# time-lapse: conservation + camping structure
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [7, 16, 64, 333])
+def test_engine_lapse_reconciles_across_interval_counts(lenet_report, n):
+    lapse = TimeLapse.from_report(lenet_report, num_intervals=n,
+                                  label="lenet")
+    assert len(lapse.intervals) == n
+    assert lapse.reconcile() < 0.01, (
+        f"interval sums diverge from SimReport totals at n={n}: "
+        f"{lapse.reconcile():.3%}")
+
+
+def test_engine_lapse_totals_match_report_exactly(lenet_report):
+    lapse = TimeLapse.from_report(lenet_report, num_intervals=64)
+    got = lapse.totals()
+    for u, want in lenet_report.unit_seconds.items():
+        if u in ("mxu", "vpu", "hbm", "ici") and want > 0:
+            assert got[f"busy_{u}_seconds"] == pytest.approx(want, rel=1e-9)
+    for c, want in enumerate(lenet_report.channel_busy_seconds):
+        if want > 0:
+            assert got[f"channel_{c}_seconds"] == pytest.approx(want,
+                                                                rel=1e-6)
+
+
+def test_lenet_lapse_camping_intervals_show_elevated_imbalance(lenet_report):
+    """The paper's partition-camping structure: intervals containing
+    camping-class ops (dynamic-update-slice here) must read a higher
+    channel-imbalance index than the balanced rest of the timeline."""
+    lapse = TimeLapse.from_report(lenet_report, num_intervals=64)
+    camp = [iv.channel_imbalance for iv in lapse.intervals
+            if iv.camping_seconds > 0]
+    flat = [iv.channel_imbalance for iv in lapse.intervals
+            if iv.camping_seconds == 0 and sum(iv.channel_busy) > 0]
+    assert camp, "lenet train step lost its camping-class ops"
+    assert flat, "lenet lapse has no balanced intervals to compare against"
+    assert max(camp) > statistics.median(flat)
+    assert statistics.median(flat) == pytest.approx(1.0, abs=0.01)
+
+
+_CAMPING_HLO = """
+ENTRY %main (p0: f32[1048576], idx: s32[1048576]) -> f32[1048576] {
+  %p0 = f32[1048576]{0} parameter(0)
+  %idx = s32[1048576]{0} parameter(1)
+  %g0 = f32[1048576]{0} gather(%p0, %idx), offset_dims={}
+  %g1 = f32[1048576]{0} gather(%p0, %g0), offset_dims={}
+  ROOT %g2 = f32[1048576]{0} gather(%p0, %g1), offset_dims={}
+}
+"""
+
+
+def test_gather_dominated_module_crosses_camped_threshold():
+    rep = Engine().simulate(parse_hlo_module(_CAMPING_HLO))
+    lapse = TimeLapse.from_report(rep, num_intervals=16, label="camping")
+    camped = lapse.camped_intervals()
+    assert camped, "gather chain must produce camped intervals"
+    worst = max(iv.channel_imbalance for iv in lapse.intervals)
+    assert worst > CAMPED_THRESHOLD
+    assert lapse.reconcile() < 0.01
+    strips = lapse.heat_strips()
+    assert "camp" in strips and "!" in strips
+
+
+def test_cluster_lapse_reconciles_and_integrates_queue(cluster_report):
+    from repro.cluster.export import _queue_depth_events
+
+    lapse = TimeLapse.from_cluster(cluster_report, num_intervals=64)
+    assert lapse.kind == "cluster"
+    assert lapse.reconcile() < 0.01
+    assert all(iv.queue_depth >= 0 for iv in lapse.intervals)
+    # queue-depth area == total job waiting time from the event deltas
+    total_wait = sum(-d * t for t, d in _queue_depth_events(cluster_report))
+    area = sum(iv.queue_depth * iv.width for iv in lapse.intervals)
+    assert area == pytest.approx(total_wait, rel=1e-6, abs=1e-9)
+
+
+def test_lapse_doc_round_trip_and_csv(lenet_report):
+    lapse = TimeLapse.from_report(lenet_report, num_intervals=32,
+                                  label="lenet")
+    back = TimeLapse.from_doc(json.loads(lapse.to_json()))
+    assert back.kind == "engine" and back.label == "lenet"
+    assert back.totals() == pytest.approx(lapse.totals())
+    assert back.reconcile() == pytest.approx(lapse.reconcile())
+    csv = lapse.to_csv()
+    assert len(csv.splitlines()) == 33
+    assert csv.splitlines()[0].startswith("index,t0,t1,busy_")
+
+
+def test_empty_and_invalid_lapse():
+    with pytest.raises(ValueError):
+        TimeLapse.from_report(None, num_intervals=0)
+    empty = TimeLapse("engine", "none", [])
+    assert empty.reconcile() == 0.0 and empty.totals() == {}
+    assert empty.heat_strips() == "(empty time-lapse)"
+    assert empty.to_chrome_events() == []
+
+
+# ---------------------------------------------------------------------------
+# export helpers
+# ---------------------------------------------------------------------------
+
+
+def test_export_event_constructors():
+    m = thread_meta("lane", 3)
+    assert m == {"name": "thread_name", "ph": "M", "pid": 0, "tid": 3,
+                 "args": {"name": "lane"}}
+    d = duration_event("op", "cat", 1.0, 0.0, tid=2, cname="grey")
+    assert d["ts"] == 1e6 and d["dur"] == 0.01 and d["cname"] == "grey"
+    c = counter_event("q", "queue", 2.0, {"jobs": 3})
+    assert c["ph"] == "C" and c["args"] == {"jobs": 3} and "tid" not in c
+    i = instant_event("fail", "failure", 3.0, tid=1)
+    assert i["ph"] == "i" and i["s"] == "g"
+    doc = json.loads(trace_json([m], [d], [c, i]))
+    assert len(doc["traceEvents"]) == 4
+    assert shade(0.0) == " " and shade(1.0) == "@" and shade(99.0) == "@"
+
+
+# ---------------------------------------------------------------------------
+# manifests + diff
+# ---------------------------------------------------------------------------
+
+
+def test_engine_manifest_round_trip(tmp_path, lenet_report):
+    lapse = TimeLapse.from_report(lenet_report, num_intervals=16)
+    man = engine_manifest(lenet_report, config={"arch": "lenet"},
+                          seeds={"seed": 0}, label="lenet",
+                          stage_seconds={"simulate": 0.5}, timelapse=lapse)
+    assert man.kind == "engine"
+    assert all(isinstance(v, (int, float)) for v in man.metrics.values())
+    path = tmp_path / "m.json"
+    man.save(str(path))
+    back = RunManifest.load(str(path))
+    assert back.digest == man.digest
+    assert back.metrics == pytest.approx(man.metrics)
+    assert back.timelapse["num_intervals"] == 16
+    # digest covers config+seeds+metrics, NOT wall-clock stage timings
+    noisy = RunManifest(man.kind, man.label, man.config, man.seeds,
+                        man.metrics, stage_seconds={"simulate": 99.0})
+    assert noisy.digest == man.digest
+    moved = RunManifest(man.kind, man.label, dict(man.config, arch="mlp"),
+                        man.seeds, man.metrics)
+    assert moved.digest != man.digest
+
+
+def test_manifest_rejects_newer_schema():
+    with pytest.raises(ValueError):
+        RunManifest.from_doc({"schema": 99, "kind": "engine"})
+
+
+def test_metric_layer_attribution():
+    assert metric_layer("channel_imbalance") == "memory"
+    assert metric_layer("peak_hbm_bytes") == "memory"
+    assert metric_layer("link_imbalance") == "topology"
+    assert metric_layer("exposed_ici_seconds") == "topology"
+    assert metric_layer("goodput_fraction") == "faults"
+    assert metric_layer("gang_reshapes") == "faults"
+    assert metric_layer("mean_queue_delay_s") == "cluster"
+    assert metric_layer("p99_latency_s") == "cluster"
+    assert metric_layer("cache_hit_rate") == "cluster"
+    assert metric_layer("mfu") == "engine"
+    assert metric_layer("total_seconds") == "engine"
+
+
+def test_diff_self_is_empty_and_knob_change_attributes():
+    a = RunManifest("cluster", "bursty x fifo",
+                    config={"policy": "fifo", "devices": "2"},
+                    seeds={"seed": 7},
+                    metrics={"mean_queue_delay_s": 1.0, "makespan_s": 10.0,
+                             "mfu": 0.5})
+    assert diff_manifests(a, a).empty
+    b = RunManifest("cluster", "bursty x sjf",
+                    config={"policy": "sjf", "devices": "2"},
+                    seeds={"seed": 7},
+                    metrics={"mean_queue_delay_s": 0.5, "makespan_s": 10.0,
+                             "mfu": 0.5})
+    d = diff_manifests(a, b)
+    assert not d.empty and not d.identical_digest
+    assert d.config_changes == {"policy": ("fifo", "sjf")}
+    assert [m.name for m in d.metric_deltas] == ["mean_queue_delay_s"]
+    assert d.metric_deltas[0].layer == "cluster"
+    assert d.layers() == {"cluster": 1}
+    assert "policy" in d.render() and "mean_queue_delay_s" in d.render()
+
+
+def test_diff_kind_mismatch_and_zero_baseline():
+    a = RunManifest("engine", "a", metrics={"x": 1.0})
+    b = RunManifest("cluster", "b", metrics={"x": 1.0})
+    d = diff_manifests(a, b)
+    assert d.kind_mismatch == ("engine", "cluster") and not d.empty
+    assert "KIND MISMATCH" in d.render()
+    md = MetricDelta("hol_bypasses", 0.0, 3.0, "cluster")
+    assert math.isinf(md.rel_delta)
+    assert "was 0" in md.render()
+    doc = diff_manifests(RunManifest("c", "a", metrics={"h": 0.0}),
+                         RunManifest("c", "b", metrics={"h": 3.0})).to_doc()
+    assert doc["metric_deltas"][0]["rel_delta"] is None
+    json.dumps(doc)                      # strict-JSON serializable
+
+
+def test_diff_finds_lapse_divergence():
+    iv = {"t0": 0.0, "t1": 1.0, "busy_seconds": {"mxu": 0.5},
+          "channel_busy": [], "link_busy": {}, "camping_seconds": 0.0,
+          "ops_retired": 1.0, "queue_depth": 0.0}
+    iv2 = dict(iv, busy_seconds={"mxu": 0.9})
+    a = RunManifest("engine", "a", timelapse={"intervals": [iv, iv]})
+    b = RunManifest("engine", "b", timelapse={"intervals": [iv, iv2]})
+    d = diff_manifests(a, b)
+    assert len(d.lapse_divergences) == 1
+    dv = d.lapse_divergences[0]
+    assert dv.index == 1 and dv.series == "busy_mxu"
+    assert dv.a == 0.5 and dv.b == 0.9
+
+
+def test_diff_tolerance_window():
+    a = RunManifest("engine", "a", metrics={"x": 1.0})
+    b = RunManifest("engine", "b", metrics={"x": 1.0 + 1e-12})
+    assert diff_manifests(a, b).empty
+    assert not diff_manifests(a, b, rel_tol=0.0, abs_tol=0.0).empty
+    assert diff_manifests(a, RunManifest("engine", "b",
+                                         metrics={"x": 1.05}),
+                          rel_tol=0.1).empty
+
+
+def test_end_to_end_policy_knob_diff(cluster_report):
+    """The acceptance scenario: two seeded fleet runs differing only in
+    the scheduling policy must diff non-empty with the movement attributed
+    to cluster-layer (queueing) metrics."""
+    other = _cluster_run("sjf")
+    mk = lambda rep, pol: cluster_manifest(
+        rep, config={"policy": pol, "trace": "synthetic:bursty",
+                     "devices": "2"},
+        seeds={"seed": 7},
+        timelapse=TimeLapse.from_cluster(rep, num_intervals=64))
+    d = diff_manifests(mk(cluster_report, "fifo"), mk(other, "sjf"))
+    assert d.config_changes == {"policy": ("fifo", "sjf")}
+    assert d.metric_deltas, "policy change must move queueing metrics"
+    assert all(m.layer == "cluster" for m in d.metric_deltas)
+    moved = {m.name for m in d.metric_deltas}
+    assert moved & {"mean_queue_delay_s", "p50_latency_s", "p95_latency_s",
+                    "p99_latency_s", "hol_bypasses", "makespan_s"}
+    # and the same-config self-diff stays empty
+    assert diff_manifests(mk(cluster_report, "fifo"),
+                          mk(cluster_report, "fifo")).empty
+
+
+def test_obs_cli_exit_codes(tmp_path, cluster_report):
+    from repro.obs.__main__ import main
+
+    man = cluster_manifest(cluster_report,
+                           config={"policy": "fifo"}, seeds={"seed": 7})
+    a, b = tmp_path / "a.json", tmp_path / "b.json"
+    man.save(str(a))
+    man.save(str(b))
+    assert main(["diff", str(a), str(b)]) == 0
+    other = cluster_manifest(cluster_report,
+                             config={"policy": "sjf"}, seeds={"seed": 7})
+    other.save(str(b))
+    assert main(["diff", str(a), str(b)]) == 3
+    assert main(["diff", str(a), str(b), "--json"]) == 3
+    assert main(["diff", str(a), str(tmp_path / "missing.json")]) == 2
+    eng = RunManifest("engine", "e")
+    eng.save(str(b))
+    assert main(["diff", str(a), str(b)]) == 2
