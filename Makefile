@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test coverage lenet-repro analyze bench bench-memory bench-topology bench-cluster bench-faults bench-perf cluster lint help
+.PHONY: test coverage lenet-repro analyze bench bench-memory bench-topology bench-cluster bench-faults bench-perf doctor sentinel cluster lint help
 
 help:
 	@echo "make test          - tier-1 pytest suite (the ROADMAP verify command)"
@@ -16,6 +16,8 @@ help:
 	@echo "make bench-cluster - policy x arrival-rate sweep (repro.cluster)"
 	@echo "make bench-faults  - goodput vs checkpoint interval, Young/Daly check (repro.faults)"
 	@echo "make bench-perf    - simulator-core throughput vs BENCH_perf.json (UPDATE=1 refreshes)"
+	@echo "make doctor        - what-if repricing benchmark + demo diagnoses (UPDATE=1 refreshes baseline + appends BENCH_doctor.json)"
+	@echo "make sentinel      - gate the perf_core scenario against benchmarks/doctor_baseline.json"
 	@echo "make coverage      - tier-1 suite under pytest-cov with the CI floor"
 	@echo "make cluster       - fleet simulation CLI (POLICY/TRACE/DEVICES vars)"
 	@echo "make lint          - byte-compile + import-sanity checks"
@@ -56,6 +58,17 @@ bench-faults:
 # UPDATE=1 rewrites the committed 'after' baseline in BENCH_perf.json
 bench-perf:
 	$(PYTHON) benchmarks/perf_core.py $(if $(UPDATE),--update)
+
+# UPDATE=1 refreshes benchmarks/doctor_baseline.json and appends the run
+# to the committed BENCH_doctor.json trajectory
+doctor:
+	$(PYTHON) benchmarks/doctor_bench.py $(if $(UPDATE),--update)
+	$(PYTHON) -m repro.obs doctor camping --expect-top hbm-channel-camping
+	$(PYTHON) -m repro.obs doctor clean --expect-clean
+
+sentinel:
+	$(PYTHON) benchmarks/doctor_bench.py --manifest /tmp/doctor_fresh.json
+	$(PYTHON) -m repro.obs sentinel benchmarks/doctor_baseline.json /tmp/doctor_fresh.json
 
 POLICY ?= sjf
 TRACE ?= synthetic:bursty

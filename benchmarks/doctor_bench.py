@@ -1,0 +1,189 @@
+"""Doctor/what-if benchmarks: counterfactual repricing must be cheap.
+
+The what-if engine's reason to exist is that pricing a counterfactual via
+tape replay (patch the affected EXEC steps' prices, replay the recorded
+schedule) skips capture, walk, and allocator work entirely.  This
+benchmark holds it to the acceptance bar: on the ``perf_core`` scenario
+(``synthetic_module(64, 1<<16)``, v5e, ``cache=None``) a tape-replay
+what-if must be **>= 5x faster** than the cold knob-override
+re-simulation it replaces (``--smoke`` enforces it in CI).
+
+Also the producer of the sentinel artifacts:
+
+* ``--manifest PATH [--hw tpu-v5p]`` — write the scenario's RunManifest
+  (deterministic: same code + knobs => identical digest), the input to
+  ``python -m repro.obs sentinel``;
+* ``--update`` — refresh ``benchmarks/doctor_baseline.json`` (the
+  committed sentinel baseline), then sentinel-compare a fresh manifest
+  against it and append the verdict + the camping demo's findings to the
+  committed ``BENCH_doctor.json`` trajectory (``make doctor UPDATE=1``).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+BASELINE_PATH = REPO / "benchmarks" / "doctor_baseline.json"
+TRAJECTORY_PATH = REPO / "BENCH_doctor.json"
+
+#: the perf_core engine scenario (keep in lockstep with perf_core.py)
+ENGINE_OPS = 64
+ENGINE_ELEMS = 1 << 16
+
+MIN_SPEEDUP = 5.0        # acceptance bar: tape replay vs cold knob re-sim
+#: the headline counterfactual: its knob fallback is a full-fidelity
+#: re-simulation (op_launch_overhead_s=0, everything else identical), and
+#: tests/test_doctor.py proves the tape patch equals it bit-exactly —
+#: so the two sides of this ratio compute the same number
+WHATIF_SLUG = "launch-overhead"
+
+
+def _scenario_engine(hw_name: str = "tpu-v5e"):
+    from repro.cluster.devices import synthetic_module
+    from repro.core import CHIPS, Engine
+
+    mod = synthetic_module(ENGINE_OPS, ENGINE_ELEMS)
+    eng = Engine(CHIPS[hw_name], cache=None)
+    rep = eng.simulate(mod)          # warms parse caches + records the tape
+    return mod, eng, rep
+
+
+def bench_whatif(repeats: int = 30) -> dict:
+    """Wall-clock per counterfactual: tape replay vs cold re-simulation."""
+    from repro.obs.whatif import _knob_engine, whatif_engine
+
+    mod, eng, rep = _scenario_engine()
+
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        wi = whatif_engine(WHATIF_SLUG, rep, engine=eng, module=mod)
+    tape_s = (time.perf_counter() - t0) / repeats
+    assert wi.method == "tape-replay"
+
+    cold_repeats = max(repeats // 5, 3)
+    t0 = time.perf_counter()
+    for _ in range(cold_repeats):
+        _knob_engine(WHATIF_SLUG, eng, eng.hw).simulate(mod)
+    cold_s = (time.perf_counter() - t0) / cold_repeats
+
+    return {"whatif_tape_us": tape_s * 1e6, "whatif_cold_us": cold_s * 1e6,
+            "speedup": cold_s / tape_s if tape_s > 0 else float("inf"),
+            "recoverable_us": wi.recoverable_seconds * 1e6}
+
+
+def bench_diagnose(repeats: int = 10) -> dict:
+    """Full doctor pass (detect + price every finding) on the scenario."""
+    from repro.obs.doctor import diagnose_engine
+    from repro.obs.timelapse import TimeLapse
+
+    mod, eng, rep = _scenario_engine()
+    lapse = TimeLapse.from_report(rep, num_intervals=32, label="perf_core")
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        doc = diagnose_engine(rep, engine=eng, module=mod, lapse=lapse,
+                              label="perf_core")
+    dt = (time.perf_counter() - t0) / repeats
+    return {"diagnose_us": dt * 1e6, "findings": len(doc.findings)}
+
+
+def scenario_manifest(hw_name: str = "tpu-v5e"):
+    from repro.obs.manifest import engine_manifest
+    from repro.obs.timelapse import TimeLapse
+
+    _mod, _eng, rep = _scenario_engine(hw_name)
+    lapse = TimeLapse.from_report(rep, num_intervals=32, label="perf_core")
+    return engine_manifest(
+        rep,
+        config={"scenario": f"synthetic_module({ENGINE_OPS}, "
+                            f"{ENGINE_ELEMS})",
+                "hw": hw_name, "cache": None, "scheduler": "batched"},
+        label="doctor_bench:perf_core", timelapse=lapse)
+
+
+def run(emit) -> None:
+    """benchmarks/run.py section hook."""
+    w = bench_whatif()
+    emit("doctor_whatif_tape", w["whatif_tape_us"],
+         f"speedup {w['speedup']:.1f}x vs cold re-sim")
+    emit("doctor_whatif_cold", w["whatif_cold_us"], "knob-override resim")
+    d = bench_diagnose()
+    emit("doctor_diagnose", d["diagnose_us"],
+         f"{d['findings']} findings priced")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"CI gate: fail unless tape replay is >= "
+                         f"{MIN_SPEEDUP:.0f}x the cold re-simulation and "
+                         f"the camping demo diagnoses correctly")
+    ap.add_argument("--manifest", metavar="PATH",
+                    help="write the scenario RunManifest here and exit")
+    ap.add_argument("--hw", default="tpu-v5e",
+                    help="chip for --manifest (a different chip is the "
+                         "CI's 'perturbed knob' regression)")
+    ap.add_argument("--update", action="store_true",
+                    help="refresh benchmarks/doctor_baseline.json and "
+                         "append this run to BENCH_doctor.json")
+    args = ap.parse_args(argv)
+
+    if args.manifest:
+        man = scenario_manifest(args.hw)
+        man.save(args.manifest)
+        print(f"wrote {args.manifest} (digest {man.digest[:12]})")
+        return 0
+
+    w = bench_whatif()
+    d = bench_diagnose()
+    print(f"whatif tape-replay : {w['whatif_tape_us']:10.1f} us/call")
+    print(f"whatif cold re-sim : {w['whatif_cold_us']:10.1f} us/call")
+    print(f"speedup            : {w['speedup']:10.1f} x  "
+          f"(bar: >= {MIN_SPEEDUP:.0f}x)")
+    print(f"full diagnose      : {d['diagnose_us']:10.1f} us/call "
+          f"({d['findings']} findings)")
+
+    if args.smoke:
+        from repro.obs.doctor import diagnose_demo
+        ok = True
+        if w["speedup"] < MIN_SPEEDUP:
+            print(f"SMOKE FAIL: what-if speedup {w['speedup']:.1f}x "
+                  f"< {MIN_SPEEDUP:.0f}x")
+            ok = False
+        camp, _ = diagnose_demo("camping")
+        if not (camp.top and camp.top.slug == "hbm-channel-camping"):
+            print("SMOKE FAIL: camping demo did not rank "
+                  "hbm-channel-camping first")
+            ok = False
+        clean, _ = diagnose_demo("clean")
+        if clean.findings:
+            print(f"SMOKE FAIL: clean demo produced findings "
+                  f"{[f.slug for f in clean.findings]}")
+            ok = False
+        print("smoke: OK" if ok else "smoke: FAILED")
+        return 0 if ok else 1
+
+    if args.update:
+        from repro.obs.doctor import diagnose_demo
+        from repro.obs.sentinel import (append_trajectory, sentinel_compare,
+                                        trajectory_entry)
+        base = scenario_manifest()
+        base.save(str(BASELINE_PATH))
+        print(f"wrote {BASELINE_PATH} (digest {base.digest[:12]})")
+        fresh = scenario_manifest()
+        rep = sentinel_compare(base, fresh)
+        camp, _ = diagnose_demo("camping")
+        n = append_trajectory(str(TRAJECTORY_PATH),
+                              trajectory_entry(fresh, rep,
+                                               doctor_doc=camp.to_doc()))
+        print(f"sentinel {'CLEAN' if rep.clean else 'REGRESSION'}; "
+              f"appended run #{n} to {TRAJECTORY_PATH}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

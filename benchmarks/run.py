@@ -16,6 +16,8 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
                      seeded failure process, peak vs Young/Daly optimum
   checkpointing    — §III-F fidelity-switching checkpoint flow
   kernels          — Pallas kernel micro-benchmarks + modeled v5e times
+  doctor           — repro.obs.doctor what-if repricing: tape replay vs
+                     cold knob re-simulation, full-diagnosis latency
   roofline         — §Roofline table from the dry-run artifacts (if present)
 """
 from __future__ import annotations
@@ -30,9 +32,9 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 def main() -> None:
     from benchmarks import (checkpointing, cluster_policies, conv_algos,
-                            correlation, failure_sweep, kernels_bench,
-                            memory_camping, perf_core, phase_analysis,
-                            power_breakdown, topology_sweep)
+                            correlation, doctor_bench, failure_sweep,
+                            kernels_bench, memory_camping, perf_core,
+                            phase_analysis, power_breakdown, topology_sweep)
     sections = [
         ("perf_core", perf_core.run),
         ("correlation", correlation.run),
@@ -45,6 +47,7 @@ def main() -> None:
         ("failure_sweep", failure_sweep.run),
         ("checkpointing", checkpointing.run),
         ("kernels", kernels_bench.run),
+        ("doctor", doctor_bench.run),
     ]
     failures = []
     for name, fn in sections:

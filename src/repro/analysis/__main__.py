@@ -64,6 +64,10 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--manifest", metavar="PATH",
                    help="write a repro.obs run manifest here (compare runs "
                         "with `python -m repro.obs diff A B`)")
+    p.add_argument("--doctor", action="store_true",
+                   help="run repro.obs.doctor over the report: ranked "
+                        "findings with counterfactual recoverable_seconds "
+                        "(annotations also land in --chrome-trace)")
     p.add_argument("--spans", metavar="PATH",
                    help="enable the simulator self-span tracer and write its "
                         "chrome trace here ('-' for stdout)")
@@ -167,7 +171,7 @@ def main(argv=None) -> int:
     mark("render")
 
     lapse = None
-    if args.timelapse or args.manifest or args.chrome_trace:
+    if args.timelapse or args.manifest or args.chrome_trace or args.doctor:
         from repro.obs.timelapse import TimeLapse
         lapse = TimeLapse.from_report(rep, num_intervals=args.lapse_intervals,
                                       label=args.arch)
@@ -175,9 +179,21 @@ def main(argv=None) -> int:
         print()
         print(lapse.heat_strips(width=args.width))
 
+    doctor_rep = None
+    if args.doctor:
+        from repro.obs.doctor import diagnose_engine
+        doctor_rep = diagnose_engine(rep, engine=sim.engine,
+                                     module=cap.module, lapse=lapse,
+                                     label=args.arch)
+        print()
+        print(doctor_rep.table(width=args.width))
+    mark("doctor")
+
     outputs = []
     if args.chrome_trace:
         extra: list = lapse.to_chrome_events() if lapse is not None else []
+        if doctor_rep is not None:
+            extra = extra + doctor_rep.to_chrome_events()
         if TRACER.enabled:
             extra = extra + TRACER.to_chrome_events()
         outputs.append((args.chrome_trace,

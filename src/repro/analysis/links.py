@@ -29,9 +29,10 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.engine import SimReport, TimelineEntry
 
 #: imbalance (hottest-link bytes / mean-link bytes) above which the fabric
-#: counts as link-camped — same "well above ~1.5" bar the channel detector
-#: documents.
-LINK_CAMPING_THRESHOLD = 1.5
+#: counts as link-camped — hoisted to the shared pathology-threshold config
+#: (``repro.obs.thresholds``) so this table, the timelapse "!" markers and
+#: the doctor's link detector all agree on one bar.
+from repro.obs.thresholds import LINK_CAMPING_THRESHOLD  # noqa: E402
 
 #: pseudo-link name for legacy entries that carry no per-link split
 FLAT_LINK = "ici:flat"

@@ -94,6 +94,10 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--manifest", metavar="PATH",
                    help="write a repro.obs run manifest here (compare runs "
                         "with `python -m repro.obs diff A B`)")
+    p.add_argument("--doctor", action="store_true",
+                   help="run repro.obs.doctor over the fleet report: ranked "
+                        "findings (HoL blocking, gang stragglers, checkpoint "
+                        "cadence vs Young-Daly, cache miss storms)")
     p.add_argument("--spans", metavar="PATH",
                    help="enable the simulator self-span tracer and write its "
                         "chrome trace here ('-' for stdout)")
@@ -214,7 +218,7 @@ def main(argv=None) -> int:
     rep.stage_seconds.update(timer.stage_seconds)
 
     lapse = None
-    if args.timelapse or args.manifest or args.chrome_trace:
+    if args.timelapse or args.manifest or args.chrome_trace or args.doctor:
         from repro.obs.timelapse import TimeLapse
         lapse = TimeLapse.from_cluster(
             rep, num_intervals=args.lapse_intervals,
@@ -223,9 +227,24 @@ def main(argv=None) -> int:
         print()
         print(lapse.heat_strips(width=args.width))
 
+    doctor_rep = None
+    if args.doctor:
+        from repro.obs.doctor import diagnose_cluster
+        context = {}
+        if ckpt is not None:
+            context["checkpoint"] = ckpt
+        if faults is not None:
+            context["mtbf_s"] = faults.mtbf_s
+        doctor_rep = diagnose_cluster(rep, lapse=lapse,
+                                      context=context or None)
+        print()
+        print(doctor_rep.table(width=args.width))
+
     outputs = []
     if args.chrome_trace:
         extra: list = lapse.to_chrome_events() if lapse is not None else []
+        if doctor_rep is not None:
+            extra = extra + doctor_rep.to_chrome_events()
         if TRACER.enabled:
             extra = extra + TRACER.to_chrome_events()
         outputs.append((args.chrome_trace,

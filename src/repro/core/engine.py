@@ -487,6 +487,25 @@ class Engine:
             cache.store(cache_key, mod, report)
         return report
 
+    def tape_for(self, mod: SimModule) -> Optional[Any]:
+        """The replay tape for ``mod``, recording one if this engine has
+        none yet.  Returns ``None`` under the legacy scheduler (it never
+        records).  The tape is the counterfactual surface for
+        :mod:`repro.obs.whatif`: its EXEC steps carry every pricing input,
+        so a patched copy replays into an idealized report without
+        re-walking the module."""
+        if self.scheduler == "legacy":
+            return None
+        tape = self._tapes.get(id(mod))
+        if tape is None:
+            if mod.entry is None:
+                raise ValueError("module has no entry computation")
+            with TRACER.span("engine.record", module=mod.entry):
+                _report, tape = self._walk_simulate(mod, None, record=True)
+            self._tapes[id(mod)] = tape
+            self._tape_mods[id(mod)] = mod
+        return tape
+
     def _walk_simulate(self, mod: SimModule,
                        window: Optional[Tuple[int, int]],
                        record: bool) -> Tuple[SimReport, Optional[Any]]:

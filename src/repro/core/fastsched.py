@@ -102,13 +102,20 @@ class TapeRecorder:
         return tuple(out)
 
 
-def replay(tape: ModuleTape, engine, window: Optional[Tuple[int, int]]):
+def replay(tape: ModuleTape, engine, window: Optional[Tuple[int, int]],
+           totals_only: bool = False):
     """Re-run a recorded tape against fresh clocks — the batched scheduler.
 
     Mirrors the legacy walk's scheduling arithmetic statement for
     statement (candidate order, strict-greater tie-breaks, lazy link-clock
     creation, while push-forward), so the produced :class:`SimReport` is
     identical to a cold ``_walk_simulate`` of the same inputs.
+
+    ``totals_only`` skips the report's per-op artifacts (timeline entries,
+    exposure spans, critical-path attribution) while keeping the
+    scheduling arithmetic bit-identical — for callers that only need the
+    makespan and busy totals, like the what-if repricer, which replays
+    the tape once per candidate counterfactual.
     """
     from repro.core.engine import (
         Engine, RESOURCES, SimReport, TimelineEntry, _Node,
@@ -189,15 +196,16 @@ def replay(tape: ModuleTape, engine, window: Optional[Tuple[int, int]]):
                 elif si is not None:
                     streams[si] = finish
                     stream_last[si] = node_id
-                nodes[node_id] = _Node(unit, ot.seconds * scale, finish,
-                                       spred)
+                if not totals_only:
+                    nodes[node_id] = _Node(unit, ot.seconds * scale,
+                                           finish, spred)
                 if finish > state["makespan"]:
                     state["makespan"] = finish
                     state["makespan_node"] = node_id
                 if window and not (window[0] <= idx < window[1]):
                     state["ff_overhead"] += ot.overhead_s * scale
                     ff_spans.append((start, ot.seconds * scale, unit))
-                else:
+                elif not totals_only:
                     timeline.append(TimelineEntry(
                         op.name, op.opcode, unit, start, ot.seconds, scale,
                         ot.flops, ot.hbm_bytes, ot.ici_bytes, comp_name,
@@ -285,8 +293,13 @@ def replay(tape: ModuleTape, engine, window: Optional[Tuple[int, int]]):
     total = state["makespan"]
     compute_seconds = sum(v for u, v in unit_seconds.items() if u != "ici")
     ici_seconds = unit_seconds.get("ici", 0.0)
-    exposed = Engine._exposure(timeline, ff_spans)
-    critical_path = Engine._critical_path(nodes, state["makespan_node"])
+    if totals_only:
+        exposed: Dict[str, float] = {}
+        critical_path: Dict[str, float] = {}
+    else:
+        exposed = Engine._exposure(timeline, ff_spans)
+        critical_path = Engine._critical_path(nodes,
+                                              state["makespan_node"])
     return SimReport(
         total_seconds=total,
         compute_seconds=compute_seconds,
@@ -309,6 +322,40 @@ def replay(tape: ModuleTape, engine, window: Optional[Tuple[int, int]]):
     )
 
 
+def map_exec_steps(steps, fn):
+    """Rebuild a step list with ``fn`` applied to every EXEC tuple,
+    recursing through CALL/WHILE sub-frames.  ``fn(step) -> step`` returns
+    a replacement EXEC tuple (or the input unchanged); every other step
+    kind passes through untouched.  This is the one structural walker the
+    delta tiers (:func:`reprice_ici`) and the counterfactual price
+    patchers (:mod:`repro.obs.whatif`) share, so a step-encoding change
+    only has to be taught here."""
+    out = []
+    for st in steps:
+        kind = st[0]
+        if kind == EXEC:
+            out.append(fn(st))
+        elif kind == CALL:
+            out.append((CALL, st[1], st[2], map_exec_steps(st[3], fn),
+                        st[4], st[5]))
+        elif kind == WHILE:
+            out.append((WHILE, st[1], st[2], st[3],
+                        map_exec_steps(st[4], fn), st[5], st[6]))
+        else:
+            out.append(st)
+    return out
+
+
+def patched_tape(tape: ModuleTape, fn) -> ModuleTape:
+    """A new tape sharing ``tape``'s structure with ``fn`` mapped over its
+    EXEC steps (see :func:`map_exec_steps`).  Slot layout and the memory
+    model's whole-run outputs are shared read-only — price patches never
+    move allocations."""
+    return ModuleTape(map_exec_steps(tape.steps, fn), tape.root_slot,
+                      tape.last_slots, tape.n_slots, tape.has_mem,
+                      tape.mem_peak, tape.mem_channel_busy, tape.memmap)
+
+
 def reprice_ici(tape: ModuleTape, mod, hw, fabric) -> Optional[ModuleTape]:
     """Delta tier: rebuild ONLY the collective steps' prices through a new
     fabric state (e.g. a different broken-link set), reusing every
@@ -324,35 +371,24 @@ def reprice_ici(tape: ModuleTape, mod, hw, fabric) -> Optional[ModuleTape]:
     """
     from repro.core.timing import op_time
 
-    def redo(steps):
-        out = []
-        for st in steps:
-            kind = st[0]
-            if kind == EXEC and st[5].unit == "ici":
-                (_k, slot_out, deps, idx, node_id, _ot, scale, chans, _lnk,
-                 cbytes, spill, comp_name, op) = st
-                comp = mod.computations[comp_name]
-                ot2 = op_time(mod, comp, op, hw, fabric=fabric)
-                if ot2.unit != "ici":
-                    raise _UnitFlip()
-                links2 = sorted(ot2.link_seconds) if ot2.link_seconds \
-                    else None
-                out.append((EXEC, slot_out, deps, idx, node_id, ot2, scale,
-                            chans, links2, cbytes, spill, comp_name, op))
-            elif kind == CALL:
-                out.append((CALL, st[1], st[2], redo(st[3]), st[4], st[5]))
-            elif kind == WHILE:
-                out.append((WHILE, st[1], st[2], st[3], redo(st[4]), st[5],
-                            st[6]))
-            else:
-                out.append(st)
-        return out
+    def redo(st):
+        if st[5].unit != "ici":
+            return st
+        (_k, slot_out, deps, idx, node_id, _ot, scale, chans, _lnk,
+         cbytes, spill, comp_name, op) = st
+        comp = mod.computations[comp_name]
+        ot2 = op_time(mod, comp, op, hw, fabric=fabric)
+        if ot2.unit != "ici":
+            raise _UnitFlip()
+        links2 = sorted(ot2.link_seconds) if ot2.link_seconds else None
+        return (EXEC, slot_out, deps, idx, node_id, ot2, scale,
+                chans, links2, cbytes, spill, comp_name, op)
 
     from repro.obs.metrics import REGISTRY
     from repro.obs.trace import TRACER
     with TRACER.span("fastsched.reprice_ici"):
         try:
-            steps = redo(tape.steps)
+            steps = map_exec_steps(tape.steps, redo)
         except _UnitFlip:
             REGISTRY.counter("tape_reprice_fallbacks_total").inc()
             return None

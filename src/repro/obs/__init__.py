@@ -18,7 +18,16 @@ This package is that methodology applied to the whole simulator stack:
   (unit occupancy, channel-camping index, link utilization, queue
   depth) derived from existing timelines, reconciling to report totals;
 * :mod:`repro.obs.manifest` / :mod:`repro.obs.diff` — run manifests and
-  the ``python -m repro.obs diff`` regression attributor.
+  the ``python -m repro.obs diff`` regression attributor;
+* :mod:`repro.obs.thresholds` — the single source of truth for every
+  "how hot is pathological" cutoff (camping, imbalance, exposure);
+* :mod:`repro.obs.detectors` / :mod:`repro.obs.whatif` /
+  :mod:`repro.obs.doctor` — pluggable pathology detectors, the
+  counterfactual what-if pricer (tape replay with patched step prices),
+  and the ranked-findings doctor built on both;
+* :mod:`repro.obs.sentinel` — the CI regression gate
+  (``python -m repro.obs sentinel``, exit 0/3/2) and the
+  ``BENCH_doctor.json`` trajectory.
 
 Import structure note: ``trace``/``metrics``/``export`` are
 dependency-free and imported eagerly — the engine and cluster layers
@@ -32,6 +41,7 @@ from repro.obs.export import (SHADES, counter_event, duration_event,
                               instant_event, shade, thread_meta, trace_json)
 from repro.obs.metrics import (REGISTRY, Counter, Gauge, Histogram,
                                MetricsRegistry, StageTimer)
+from repro.obs.thresholds import DEFAULT_THRESHOLDS, Thresholds
 from repro.obs.trace import SELF_PID, SpanRecord, SpanTracer, TRACER
 
 #: lazily-resolved symbols -> defining submodule (these import analysis /
@@ -48,6 +58,23 @@ _LAZY = {
     "MetricDelta": "repro.obs.diff",
     "diff_manifests": "repro.obs.diff",
     "metric_layer": "repro.obs.diff",
+    "resample_lapse_doc": "repro.obs.diff",
+    "Finding": "repro.obs.detectors",
+    "run_engine_detectors": "repro.obs.detectors",
+    "run_cluster_detectors": "repro.obs.detectors",
+    "WhatIf": "repro.obs.whatif",
+    "whatif_engine": "repro.obs.whatif",
+    "whatif_all": "repro.obs.whatif",
+    "DoctorReport": "repro.obs.doctor",
+    "diagnose_engine": "repro.obs.doctor",
+    "diagnose_cluster": "repro.obs.doctor",
+    "diagnose_demo": "repro.obs.doctor",
+    "SentinelReport": "repro.obs.sentinel",
+    "MetricVerdict": "repro.obs.sentinel",
+    "sentinel_compare": "repro.obs.sentinel",
+    "trajectory_entry": "repro.obs.sentinel",
+    "append_trajectory": "repro.obs.sentinel",
+    "parse_tolerances": "repro.obs.sentinel",
 }
 
 
@@ -69,7 +96,14 @@ __all__ = [
     "StageTimer",
     "SHADES", "shade", "thread_meta", "duration_event", "counter_event",
     "instant_event", "trace_json",
+    "Thresholds", "DEFAULT_THRESHOLDS",
     "TimeLapse", "LapseInterval", "CAMPED_THRESHOLD",
     "RunManifest", "engine_manifest", "cluster_manifest",
     "ManifestDiff", "MetricDelta", "diff_manifests", "metric_layer",
+    "resample_lapse_doc",
+    "Finding", "run_engine_detectors", "run_cluster_detectors",
+    "WhatIf", "whatif_engine", "whatif_all",
+    "DoctorReport", "diagnose_engine", "diagnose_cluster", "diagnose_demo",
+    "SentinelReport", "MetricVerdict", "sentinel_compare",
+    "trajectory_entry", "append_trajectory", "parse_tolerances",
 ]

@@ -114,6 +114,9 @@ class ManifestDiff:
     seed_changes: Dict[str, Tuple[Any, Any]] = field(default_factory=dict)
     metric_deltas: List[MetricDelta] = field(default_factory=list)
     lapse_divergences: List[LapseDivergence] = field(default_factory=list)
+    #: set when the two lapses had different interval counts and were
+    #: resampled to the coarser grid before comparison
+    lapse_note: str = ""
 
     @property
     def empty(self) -> bool:
@@ -153,6 +156,7 @@ class ManifestDiff:
                 "rel_delta": d.rel_delta
                 if math.isfinite(d.rel_delta) else None,
             } for d in self.lapse_divergences],
+            "lapse_note": self.lapse_note or None,
         }
 
     def render(self, top: int = 12) -> str:
@@ -164,6 +168,8 @@ class ManifestDiff:
         if self.empty:
             lines.append("  identical: no config, seed, metric, or "
                          "time-lapse differences")
+            if self.lapse_note:
+                lines.append(f"  note: {self.lapse_note}")
             return "\n".join(lines)
         if self.config_changes:
             lines.append("  config changes:")
@@ -183,6 +189,8 @@ class ManifestDiff:
             if len(self.metric_deltas) > top:
                 lines.append(f"    ... {len(self.metric_deltas) - top} "
                              f"more (use --top)")
+        if self.lapse_note:
+            lines.append(f"  note: {self.lapse_note}")
         if self.lapse_divergences:
             lines.append(f"  time-lapse divergences "
                          f"({len(self.lapse_divergences)} intervals; "
@@ -193,6 +201,60 @@ class ManifestDiff:
                 lines.append(f"    ... {len(self.lapse_divergences) - top} "
                              f"more")
         return "\n".join(lines)
+
+
+def resample_lapse_doc(doc: Dict[str, Any], n: int) -> Dict[str, Any]:
+    """Rebucket a TimeLapse doc onto ``n`` equal intervals of the same
+    span.  Additive series (busy/channel/link/camping/ops) distribute by
+    proportional overlap — exactly the smearing ``TimeLapse.from_report``
+    uses, so resampling a fine grid reproduces the coarse grid up to FP;
+    ``queue_depth`` (a mean) is width-weighted.  Used by
+    :func:`diff_manifests` when two manifests were produced with
+    different ``--lapse-intervals`` counts.
+    """
+    intervals = doc.get("intervals", [])
+    if not intervals or n <= 0 or len(intervals) == n:
+        return doc
+    end = max(intervals[-1].get("t1", 0.0), 1e-12)
+    width = end / n
+    out = [{"t0": i * width, "t1": (i + 1) * width, "busy_seconds": {},
+            "channel_busy": [], "link_busy": {}, "camping_seconds": 0.0,
+            "ops_retired": 0.0, "queue_depth": 0.0} for i in range(n)]
+    for iv in intervals:
+        t0, t1 = iv.get("t0", 0.0), iv.get("t1", 0.0)
+        w = t1 - t0
+        if w <= 0:
+            continue
+        b0 = min(int(t0 / width), n - 1)
+        b1 = min(int(t1 / width), n - 1)
+        for bi in range(b0, b1 + 1):
+            o = out[bi]
+            ov = max(min(t1, o["t1"]) - max(t0, o["t0"]), 0.0)
+            frac = ov / w
+            if frac <= 0 and b0 != b1:
+                continue
+            if b0 == b1:
+                frac, ov = 1.0, w    # guard FP loss: fits one bucket
+            for k, v in iv.get("busy_seconds", {}).items():
+                o["busy_seconds"][k] = o["busy_seconds"].get(k, 0.0) \
+                    + v * frac
+            cb = iv.get("channel_busy", [])
+            if cb:
+                if len(o["channel_busy"]) < len(cb):
+                    o["channel_busy"].extend(
+                        [0.0] * (len(cb) - len(o["channel_busy"])))
+                for c, v in enumerate(cb):
+                    o["channel_busy"][c] += v * frac
+            for l, v in iv.get("link_busy", {}).items():
+                o["link_busy"][l] = o["link_busy"].get(l, 0.0) + v * frac
+            o["camping_seconds"] += iv.get("camping_seconds", 0.0) * frac
+            o["ops_retired"] += iv.get("ops_retired", 0.0) * frac
+            o["queue_depth"] += iv.get("queue_depth", 0.0) * ov / width
+    for o in out:
+        cb = o["channel_busy"]
+        mean = sum(cb) / len(cb) if cb else 0.0
+        o["channel_imbalance"] = max(cb) / mean if mean > 0 else 1.0
+    return {**doc, "num_intervals": n, "intervals": out}
 
 
 def _lapse_series(doc: Dict[str, Any]) -> Dict[int, Dict[str, float]]:
@@ -249,12 +311,24 @@ def diff_manifests(a: RunManifest, b: RunManifest,
     d.metric_deltas.sort(key=lambda m: abs(m.rel_delta), reverse=True)
 
     if a.timelapse and b.timelapse:
-        sa, sb = _lapse_series(a.timelapse), _lapse_series(b.timelapse)
+        la, lb = a.timelapse, b.timelapse
+        na = len(la.get("intervals", []))
+        nb = len(lb.get("intervals", []))
+        if na != nb and na > 0 and nb > 0:
+            # different --lapse-intervals counts: degrade gracefully by
+            # resampling both onto the coarser grid instead of failing
+            # the interval-by-interval compare
+            n = min(na, nb)
+            la, lb = resample_lapse_doc(la, n), resample_lapse_doc(lb, n)
+            d.lapse_note = (f"time-lapse grids differ ({na} vs {nb} "
+                            f"intervals); both resampled to the coarser "
+                            f"{n}-interval grid before comparison")
+        sa, sb = _lapse_series(la), _lapse_series(lb)
         for i in sorted(set(sa) | set(sb)):
             ra, rb = sa.get(i, {}), sb.get(i, {})
-            t0 = (a.timelapse.get("intervals", [{}] * (i + 1))[i]
+            t0 = (la.get("intervals", [{}] * (i + 1))[i]
                   .get("t0", 0.0)) if i < len(
-                a.timelapse.get("intervals", [])) else 0.0
+                la.get("intervals", [])) else 0.0
             for series in sorted(set(ra) | set(rb)):
                 va, vb = ra.get(series, 0.0), rb.get(series, 0.0)
                 if not _close(va, vb):

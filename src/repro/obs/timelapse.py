@@ -100,9 +100,10 @@ class LapseInterval:
                 "queue_depth": self.queue_depth}
 
 
-#: per-interval channel-imbalance above this marks the bucket as camped
-#: (an even interleave reads ~1.0; CAMPING_FRACTION=0.25 subsets read >2)
-CAMPED_THRESHOLD = 1.5
+#: per-interval channel-imbalance above this marks the bucket as camped —
+#: hoisted to the shared pathology-threshold config so the doctor's camping
+#: verdicts always agree with the "!" markers rendered here
+from repro.obs.thresholds import CAMPED_THRESHOLD  # noqa: E402
 
 
 @dataclass

@@ -1,0 +1,410 @@
+"""repro.obs.doctor tests: hand-built pathological modules with known
+counterfactual arithmetic.
+
+The camping acceptance bar: the doctor's ``recoverable_seconds`` for the
+gather-chain demo must match an *actual re-simulation* of the contiguous
+twin (a negate chain with the identical per-op byte/flop profile — gather
+and negate both move 8 MiB and do 1 vpu op per element here) within 5%.
+The tape patcher mirrors ``MemoryModel.time_op`` exactly, so in practice
+the two are bit-identical; 5% is the issue's acceptance ceiling.
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.core import Engine, V5E, parse_hlo_module
+from repro.obs.doctor import (DoctorReport, demo_module_src, diagnose_demo,
+                              diagnose_engine)
+from repro.obs.thresholds import DEFAULT_THRESHOLDS
+from repro.obs.whatif import whatif_engine
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+_N = 1 << 20   # element count shared with the demo modules
+
+
+def _negate_twin_src(n_ops: int = 8) -> str:
+    """Contiguous twin of the camping demo: same op count, same per-op
+    bytes (8 MiB) and vpu flops, but negate stripes evenly instead of
+    camping a channel subset."""
+    lines = [f"ENTRY %main (p0: f32[{_N}]) -> f32[{_N}] {{",
+             f"  %p0 = f32[{_N}]{{0}} parameter(0)"]
+    prev = "p0"
+    for i in range(n_ops):
+        root = "ROOT " if i == n_ops - 1 else ""
+        lines.append(f"  {root}%n{i} = f32[{_N}]{{0}} negate(%{prev})")
+        prev = f"n{i}"
+    lines.append("}")
+    return "\n".join(lines)
+
+
+# ----------------------------------------------------------------------
+# the three hand-built pathologies
+# ----------------------------------------------------------------------
+def test_camping_module_top_finding_matches_contiguous_resim():
+    doc, rep = diagnose_demo("camping")
+    assert doc.findings, "full-camping module must produce findings"
+    top = doc.top
+    assert top.slug == "hbm-channel-camping"
+    assert top.method == "tape-replay"
+
+    # ground truth: actually re-simulate the contiguous twin
+    twin = parse_hlo_module(_negate_twin_src())
+    ideal = Engine(hw=V5E).simulate(twin).total_seconds
+    expect = rep.total_seconds - ideal
+    assert expect > 0
+    assert top.recoverable_seconds == pytest.approx(expect, rel=0.05)
+    # the patcher mirrors time_op exactly, so it should in fact be exact
+    assert top.recoverable_seconds == pytest.approx(expect, rel=1e-9)
+
+
+def test_camping_recoverable_matches_dilation_arithmetic():
+    """Full camping dilates the HBM phase by 1/CAMPING_FRACTION (4x on
+    v5e): recoverable ~= (1 - 1/4) of the camped ops' HBM time."""
+    from repro.memory.channels import CAMPING_FRACTION
+    doc, rep = diagnose_demo("camping")
+    top = doc.top
+    # camped transfer time, launch overhead excluded (idealizing the
+    # traffic shape does not remove issue cost)
+    hbm_s = sum((e.duration - e.overhead_s) * e.scale
+                for e in rep.timeline if e.unit == "hbm")
+    expect = hbm_s * (1.0 - CAMPING_FRACTION)
+    assert top.recoverable_seconds == pytest.approx(expect, rel=0.05)
+
+
+def test_clean_module_has_zero_findings():
+    doc, _rep = diagnose_demo("clean")
+    assert doc.findings == []
+    assert "clean" in doc.table()
+
+
+def test_no_overlap_module_flags_exposed_comm():
+    doc, rep = diagnose_demo("no-overlap")
+    slugs = [f.slug for f in doc.findings]
+    assert "exposed-communication" in slugs
+    top = doc.top
+    assert top.slug == "exposed-communication"
+    assert top.method == "tape-replay"
+    assert 0 < top.recoverable_seconds < rep.total_seconds
+
+
+# ----------------------------------------------------------------------
+# what-if engine: tape patch == real knob-override re-simulation
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("pathology", ["camping", "clean", "no-overlap"])
+def test_overhead_whatif_equals_legacy_engine(pathology):
+    """The launch-overhead tape patch must equal a full re-simulation
+    with op_launch_overhead_s=0 — the knob the patch claims to model."""
+    import dataclasses
+    mod = parse_hlo_module(demo_module_src(pathology))
+    engine = Engine(hw=V5E)
+    rep = engine.simulate(mod)
+    wi = whatif_engine("launch-overhead", rep, engine=engine, module=mod)
+    assert wi.method == "tape-replay"
+    hw0 = dataclasses.replace(V5E, op_launch_overhead_s=0.0)
+    cold = Engine(hw=hw0).simulate(mod).total_seconds
+    assert wi.ideal_seconds == pytest.approx(cold, rel=1e-9)
+
+
+def test_whatif_knob_fallback_under_legacy_scheduler():
+    """No tape exists under the legacy scheduler: the what-if must fall
+    back to the knob-override re-simulation and label itself so."""
+    mod = parse_hlo_module(demo_module_src("camping"))
+    engine = Engine(hw=V5E, scheduler="legacy")
+    rep = engine.simulate(mod)
+    wi = whatif_engine("hbm-channel-camping", rep, engine=engine,
+                       module=mod)
+    assert wi.method == "engine-knob"
+    assert wi.recoverable_seconds > 0
+
+
+def test_whatif_without_module_is_unpriceable():
+    mod = parse_hlo_module(demo_module_src("camping"))
+    engine = Engine(hw=V5E)
+    rep = engine.simulate(mod)
+    assert whatif_engine("launch-overhead", rep) is None
+    with pytest.raises(KeyError):
+        whatif_engine("not-a-pathology", rep, engine=engine, module=mod)
+
+
+def test_unpriced_findings_survive_without_engine():
+    """diagnose_engine without engine/module still detects, unpriced."""
+    mod = parse_hlo_module(demo_module_src("camping"))
+    rep = Engine(hw=V5E).simulate(mod)
+    doc = diagnose_engine(rep, label="detect-only")
+    assert doc.top is not None
+    assert doc.top.slug == "hbm-channel-camping"
+    assert doc.top.method == "unpriced"
+    assert doc.top.recoverable_seconds == 0.0
+
+
+# ----------------------------------------------------------------------
+# report surfaces
+# ----------------------------------------------------------------------
+def test_doctor_report_doc_and_chrome_roundtrip():
+    doc, _rep = diagnose_demo("camping")
+    d = doc.to_doc()
+    assert d["kind"] == "engine"
+    assert d["findings"][0]["slug"] == "hbm-channel-camping"
+    assert d["findings"][0]["recoverable_seconds"] > 0
+    json.loads(doc.to_json())          # valid JSON
+    events = doc.to_chrome_events()
+    assert any(e.get("ph") == "M" for e in events)          # track meta
+    assert any(e.get("ph") == "X" and e["name"] == "hbm-channel-camping"
+               for e in events)
+    # clean run: no annotation track at all
+    clean_doc, _ = diagnose_demo("clean")
+    assert clean_doc.to_chrome_events() == []
+
+
+def test_rank_clamps_analytic_recoveries_to_baseline():
+    from repro.obs.detectors import Finding
+    from repro.obs.doctor import _rank
+    f = Finding("checkpoint-interval", "t", recoverable_seconds=100.0,
+                method="analytic")
+    ranked = _rank([f], baseline=10.0, thresholds=DEFAULT_THRESHOLDS)
+    assert ranked[0].recoverable_seconds == 10.0
+
+
+# ----------------------------------------------------------------------
+# cluster doctor: Young-Daly checkpoint cadence
+# ----------------------------------------------------------------------
+def test_cluster_doctor_flags_mistuned_checkpoint_cadence():
+    from repro.cluster import (ClusterSim, Fleet, Job, JobClass,
+                               TableCostModel, Trace, make_policy)
+    from repro.faults import parse_checkpoint_spec, parse_failure_spec
+    from repro.obs.doctor import diagnose_cluster
+
+    classes = (JobClass("big", "lenet"),)
+    jobs = [Job(f"j{i}", "big", 0.0, 40) for i in range(2)]   # 40 x 1 s steps
+    trace = Trace("ckpt-demo", jobs, classes)
+    sim = ClusterSim(Fleet.from_spec("2"),
+                     TableCostModel({"big": (1.0, 1e9)}),
+                     make_policy("fifo"),
+                     faults=parse_failure_spec("mtbf:500,mttr:5"),
+                     checkpoint=parse_checkpoint_spec("every:2,write:1"))
+    rep = sim.run(trace)
+    assert rep.checkpoint_seconds > 0
+    ckpt = parse_checkpoint_spec("every:2,write:1")
+    doc = diagnose_cluster(rep, context={"checkpoint": ckpt,
+                                         "mtbf_s": 500.0})
+    slugs = [f.slug for f in doc.findings]
+    assert "checkpoint-interval" in slugs
+    f = doc.findings[slugs.index("checkpoint-interval")]
+    assert f.method == "analytic"
+    assert 0 < f.recoverable_seconds <= rep.makespan_s
+    assert doc.kind == "cluster"
+
+
+# ----------------------------------------------------------------------
+# satellite: single-sourced thresholds
+# ----------------------------------------------------------------------
+def test_thresholds_are_single_sourced():
+    from repro.analysis import links as links_mod
+    from repro.obs import timelapse as tl_mod
+    th = DEFAULT_THRESHOLDS
+    assert tl_mod.CAMPED_THRESHOLD == th.channel_camping_imbalance
+    assert links_mod.LINK_CAMPING_THRESHOLD == th.link_camping_imbalance
+    # frozen: a detector cannot quietly drift its own cutoff
+    with pytest.raises(Exception):
+        th.channel_camping_imbalance = 2.0
+
+
+# ----------------------------------------------------------------------
+# satellite: diff resamples mismatched time-lapse grids
+# ----------------------------------------------------------------------
+def _manifest_for(pathology: str, n_intervals: int):
+    from repro.obs.manifest import engine_manifest
+    from repro.obs.timelapse import TimeLapse
+    mod = parse_hlo_module(demo_module_src(pathology))
+    rep = Engine(hw=V5E).simulate(mod)
+    lapse = TimeLapse.from_report(rep, num_intervals=n_intervals,
+                                  label=pathology)
+    return engine_manifest(rep, config={"demo": pathology},
+                           label=pathology, timelapse=lapse)
+
+
+def test_diff_resamples_mismatched_lapse_grids():
+    from repro.obs.diff import diff_manifests
+    a = _manifest_for("camping", 64)
+    b = _manifest_for("camping", 32)
+    d = diff_manifests(a, b)
+    assert d.lapse_note and "32" in d.lapse_note
+    assert d.empty, (
+        "same run on different grids must diff clean after resampling: "
+        f"{[ (x.name, x.a, x.b) for x in d.metric_deltas ]}"
+        f"{d.lapse_deltas}")
+    assert d.lapse_note in d.render()
+
+
+def test_resample_lapse_doc_conserves_busy_seconds():
+    from repro.obs.diff import resample_lapse_doc
+    from repro.obs.timelapse import TimeLapse
+    mod = parse_hlo_module(demo_module_src("camping"))
+    rep = Engine(hw=V5E).simulate(mod)
+    doc = TimeLapse.from_report(rep, num_intervals=48, label="x").to_doc()
+    re = resample_lapse_doc(doc, 12)
+    assert re["num_intervals"] == 12 and len(re["intervals"]) == 12
+    assert (sum(sum(iv["busy_seconds"].values()) for iv in re["intervals"])
+            == pytest.approx(
+                sum(sum(iv["busy_seconds"].values())
+                    for iv in doc["intervals"]), rel=1e-9))
+
+
+# ----------------------------------------------------------------------
+# sentinel: compare semantics and the CLI exit-code contract
+# ----------------------------------------------------------------------
+def test_sentinel_compare_semantics():
+    from repro.obs.sentinel import parse_tolerances, sentinel_compare
+    a = _manifest_for("camping", 16)
+    b = _manifest_for("camping", 16)
+    rep = sentinel_compare(a, b)
+    assert rep.clean and rep.identical_digest
+
+    # a drifted metric regresses unless a --tol rule absorbs it
+    b2 = _manifest_for("camping", 16)
+    b2.metrics["total_seconds"] *= 1.02
+    rep2 = sentinel_compare(a, b2)
+    assert not rep2.clean
+    assert [v.name for v in rep2.regressions] == ["total_seconds"]
+    rep3 = sentinel_compare(a, b2,
+                            tolerances=parse_tolerances(
+                                ["total_seconds=0.05"]))
+    assert rep3.clean
+
+    # config drift is always a regression
+    b3 = _manifest_for("camping", 16)
+    b3.config["demo"] = "tweaked"
+    assert not sentinel_compare(a, b3).clean
+
+    # a metric the fresh run lost counts as regressed
+    b4 = _manifest_for("camping", 16)
+    del b4.metrics["total_seconds"]
+    assert not sentinel_compare(a, b4).clean
+
+    with pytest.raises(ValueError):
+        parse_tolerances(["nonsense"])
+
+
+def test_sentinel_cli_exit_codes(tmp_path, capsys):
+    from repro.obs.__main__ import main
+    pa = str(tmp_path / "a.json")
+    pb = str(tmp_path / "b.json")
+    pc = str(tmp_path / "c.json")
+    _manifest_for("camping", 16).save(pa)
+    _manifest_for("camping", 16).save(pb)
+    _manifest_for("clean", 16).save(pc)
+
+    assert main(["sentinel", pa, pb]) == 0                   # clean
+    assert main(["sentinel", pa, pc]) == 3                   # regression
+    assert main(["sentinel", pa, str(tmp_path / "no.json")]) == 2
+    assert main(["sentinel", pa, pb, "--tol", "bad-spec"]) == 2
+
+    # kind mismatch -> 2 (engine vs cluster baselines aren't comparable)
+    doc = json.loads(pathlib.Path(pa).read_text())
+    doc["kind"] = "cluster"
+    (tmp_path / "k.json").write_text(json.dumps(doc))
+    assert main(["sentinel", str(tmp_path / "k.json"), pb]) == 2
+    capsys.readouterr()
+
+
+def test_sentinel_trajectory_append(tmp_path):
+    from repro.obs.sentinel import (append_trajectory, sentinel_compare,
+                                    trajectory_entry)
+    a = _manifest_for("camping", 16)
+    rep = sentinel_compare(a, a)
+    path = str(tmp_path / "BENCH_doctor.json")
+    entry = trajectory_entry(a, rep, doctor_doc=diagnose_demo("camping")[0]
+                             .to_doc())
+    assert append_trajectory(path, entry) == 1
+    assert append_trajectory(path, trajectory_entry(a, rep)) == 2
+    doc = json.loads(pathlib.Path(path).read_text())
+    assert doc["schema"] == 1 and len(doc["runs"]) == 2
+    assert doc["runs"][0]["findings"][0]["slug"] == "hbm-channel-camping"
+    assert doc["runs"][0]["clean"] is True
+
+
+def test_doctor_cli_expectation_gates(tmp_path, capsys):
+    from repro.obs.__main__ import main
+    assert main(["doctor", "camping",
+                 "--expect-top", "hbm-channel-camping"]) == 0
+    assert main(["doctor", "clean", "--expect-clean"]) == 0
+    assert main(["doctor", "camping", "--expect-clean"]) == 3
+    assert main(["doctor", "clean",
+                 "--expect-top", "hbm-channel-camping"]) == 3
+    out = str(tmp_path / "doc.json")
+    trace = str(tmp_path / "doc_trace.json")
+    assert main(["doctor", "no-overlap", "--json", out,
+                 "--chrome-trace", trace]) == 0
+    d = json.loads(pathlib.Path(out).read_text())
+    assert d["findings"][0]["slug"] == "exposed-communication"
+    t = json.loads(pathlib.Path(trace).read_text())
+    assert any(e.get("ph") == "M"
+               and e.get("args", {}).get("name") == "doctor"
+               for e in t["traceEvents"])
+    capsys.readouterr()
+
+
+# ----------------------------------------------------------------------
+# golden: the lenet diagnosis is a pinned artifact (needs jax capture)
+# ----------------------------------------------------------------------
+def _approx_tree(got, want, path, drift):
+    """Recursive numeric compare (same contract as tests/test_golden.py)."""
+    if isinstance(want, dict):
+        if not isinstance(got, dict) or set(got) != set(want):
+            drift[path] = (want, got)
+            return
+        for k in want:
+            _approx_tree(got[k], want[k], f"{path}.{k}", drift)
+    elif isinstance(want, list):
+        if not isinstance(got, list) or len(got) != len(want):
+            drift[path] = (want, got)
+            return
+        for i, (g, w) in enumerate(zip(got, want)):
+            _approx_tree(g, w, f"{path}[{i}]", drift)
+    elif isinstance(want, float) or isinstance(got, float):
+        if got != pytest.approx(want, rel=1e-6, abs=1e-18):
+            drift[path] = (want, got)
+    elif got != want:
+        drift[path] = (want, got)
+
+
+def test_lenet_doctor_matches_golden(update_golden):
+    """Freezes the full lenet DoctorReport doc. The honest headline for
+    this tiny smoke capture is launch-overhead domination (the step is
+    1.47 ms of which 1.46 ms is issue cost) — pinned so a pricing change
+    that reshuffles the ranking shows up as a reviewable JSON diff."""
+    from repro import config as C
+    from repro.core import Simulator
+    from repro.obs.timelapse import TimeLapse
+    from repro.runtime.steps import train_bundle
+
+    entry = C.get("lenet")
+    shape = C.ShapeConfig("golden", seq_len=32, global_batch=8,
+                          kind="train")
+    rc = C.RunConfig(model=entry.smoke, shape=shape, mesh=C.SMOKE_MESH)
+    sim = Simulator()
+    cap = sim.capture_bundle(train_bundle(rc), name="lenet_doctor")
+    rep = sim.performance(cap)
+    lapse = TimeLapse.from_report(rep, num_intervals=32, label="lenet")
+    doc = diagnose_engine(rep, engine=sim.engine, module=cap.module,
+                          lapse=lapse, label="lenet")
+    assert doc.top is not None and doc.top.slug == "launch-overhead"
+    assert doc.top.method == "tape-replay"
+
+    got = doc.to_doc()
+    path = GOLDEN_DIR / "lenet_doctor.json"
+    if update_golden:
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps(got, indent=2, sort_keys=True) + "\n")
+    assert path.exists(), (
+        f"no golden snapshot at {path}; create it with "
+        f"pytest tests/test_doctor.py --update-golden")
+    want = json.loads(path.read_text())
+    drift = {}
+    _approx_tree(got, want, "doctor", drift)
+    assert not drift, (
+        f"lenet doctor report drifted from golden (expected, got): "
+        f"{dict(list(drift.items())[:8])} — if intended, rerun with "
+        f"--update-golden and review the JSON diff")
