@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test coverage lenet-repro analyze bench bench-memory bench-topology bench-cluster bench-faults bench-perf doctor sentinel cluster lint help
+.PHONY: test coverage lenet-repro analyze bench bench-memory bench-topology bench-cluster bench-faults bench-perf doctor sentinel cluster validate lint help
 
 help:
 	@echo "make test          - tier-1 pytest suite (the ROADMAP verify command)"
@@ -20,6 +20,7 @@ help:
 	@echo "make sentinel      - gate the perf_core scenario against benchmarks/doctor_baseline.json"
 	@echo "make coverage      - tier-1 suite under pytest-cov with the CI floor"
 	@echo "make cluster       - fleet simulation CLI (POLICY/TRACE/DEVICES vars)"
+	@echo "make validate      - ingest the Alibaba fixture, replay it, and cross-check Little's law + M/G/k (repro.validate)"
 	@echo "make lint          - byte-compile + import-sanity checks"
 
 test:
@@ -76,6 +77,11 @@ DEVICES ?= 4
 cluster:
 	$(PYTHON) -m repro.cluster --policy $(POLICY) --trace $(TRACE) --devices $(DEVICES)
 
+# exit 3 when a conservation identity or the M/G/k band fails
+validate:
+	$(PYTHON) -m repro.validate --trace tests/data/alibaba_fixture --policy $(POLICY)
+	$(PYTHON) benchmarks/validate_bench.py --smoke
+
 lint:
 	$(PYTHON) -m compileall -q src tests examples benchmarks
-	$(PYTHON) -c "import repro.core, repro.analysis, repro.memory, repro.topology, repro.cluster, repro.faults, repro.obs, repro.distributed.compression"
+	$(PYTHON) -c "import repro.core, repro.analysis, repro.memory, repro.topology, repro.cluster, repro.faults, repro.obs, repro.validate, repro.distributed.compression"

@@ -14,6 +14,9 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
                      delay / p95 latency / utilization per policy)
   failure_sweep    — repro.faults goodput vs checkpoint interval under a
                      seeded failure process, peak vs Young/Daly optimum
+  validate         — repro.validate analytic cross-checks: Alibaba fixture
+                     replay closes Little's law and lands in the M/G/k
+                     band; conservation stays exact under faults
   checkpointing    — §III-F fidelity-switching checkpoint flow
   kernels          — Pallas kernel micro-benchmarks + modeled v5e times
   doctor           — repro.obs.doctor what-if repricing: tape replay vs
@@ -34,7 +37,8 @@ def main() -> None:
     from benchmarks import (checkpointing, cluster_policies, conv_algos,
                             correlation, doctor_bench, failure_sweep,
                             kernels_bench, memory_camping, perf_core,
-                            phase_analysis, power_breakdown, topology_sweep)
+                            phase_analysis, power_breakdown, topology_sweep,
+                            validate_bench)
     sections = [
         ("perf_core", perf_core.run),
         ("correlation", correlation.run),
@@ -45,6 +49,7 @@ def main() -> None:
         ("topology_sweep", topology_sweep.run),
         ("cluster_policies", cluster_policies.run),
         ("failure_sweep", failure_sweep.run),
+        ("validate", validate_bench.run),
         ("checkpointing", checkpointing.run),
         ("kernels", kernels_bench.run),
         ("doctor", doctor_bench.run),

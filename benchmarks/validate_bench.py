@@ -1,0 +1,84 @@
+"""Validation benchmark: ingest -> fit -> simulate -> analytic cross-check.
+
+The fleet-level analogue of the paper's correlation section: instead of
+comparing simulated kernels against hardware counters, compare the fleet
+simulator's accounting against laws that hold regardless of implementation
+(Little's law, busy-time/utilization identities) and against the
+Allen–Cunneen M/G/k waiting-time approximation on the committed Alibaba-
+schema fixture.  Reported per scenario: worst conservation residual (must
+be float-noise), the M/G/k residual, and ingestion/validation latency.
+
+``--smoke`` runs the acceptance corner CI gates on: the fixture under SJF
+and FIFO must close Little's law to <1% and land the M/G/k prediction
+inside the 25% band at utilization <= 0.7, and the stochastic-failure
+torus scenario must keep every conservation identity exact.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from repro.cluster import ClusterSim, Fleet, make_policy, synthetic_trace
+from repro.cluster.devices import cost_model_for
+from repro.faults import StochasticFailures
+from repro.validate import load_alibaba, table_cost_model, validate_cluster
+
+FIXTURE = os.path.join(os.path.dirname(__file__), os.pardir, "tests",
+                       "data", "alibaba_fixture")
+
+
+def _fixture_scenario(policy: str):
+    trace, stats = load_alibaba(FIXTURE)
+    sim = ClusterSim(Fleet.from_spec("4"), table_cost_model(trace),
+                     make_policy(policy))
+    return sim.run(trace), stats
+
+
+def _faulty_scenario():
+    trace = synthetic_trace("bursty", n_jobs=60, rate_jobs_per_s=2.0,
+                            seed=7)
+    sim = ClusterSim(Fleet.from_spec("8"), cost_model_for(trace, "synthetic"),
+                     make_policy("sjf"), cold_start_s=0.2, quantum_s=2.0,
+                     faults=StochasticFailures(mtbf_s=30.0, mttr_s=5.0,
+                                               seed=1))
+    return sim.run(trace)
+
+
+def run(emit, smoke: bool = False):
+    for policy in ("sjf", "fifo"):
+        t0 = time.perf_counter()
+        rep, stats = _fixture_scenario(policy)
+        vrep = validate_cluster(rep)
+        us = (time.perf_counter() - t0) * 1e6
+        by = {c.name: c for c in vrep.checks}
+        mgk = by["mgk-queueing-delay"]
+        emit(f"validate_fixture_{policy}", us,
+             f"jobs={stats.jobs_kept};util={rep.utilization:.2f};"
+             f"worst_resid={vrep.worst_residual:.2e};"
+             f"mgk_resid={'gated' if mgk.gated else f'{mgk.residual:.3f}'}")
+        assert vrep.passed, vrep.render()
+        assert by["littles-law-system"].residual < 0.01
+        assert by["littles-law-queue"].residual < 0.01
+        if rep.utilization <= 0.7:
+            assert mgk.gated or mgk.residual < 0.25, mgk.render()
+
+    t0 = time.perf_counter()
+    rep = _faulty_scenario()
+    vrep = validate_cluster(rep)
+    us = (time.perf_counter() - t0) * 1e6
+    emit("validate_faulty_fleet", us,
+         f"goodput={rep.goodput_fraction:.2f};"
+         f"worst_resid={vrep.worst_residual:.2e}")
+    for c in vrep.checks:
+        if c.exact:
+            assert c.ok, c.render()
+
+
+if __name__ == "__main__":
+    import sys
+
+    def _emit(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}")
+
+    run(_emit, smoke="--smoke" in sys.argv)
+    print("validate benchmark OK")

@@ -98,6 +98,11 @@ def build_parser() -> argparse.ArgumentParser:
                    help="run repro.obs.doctor over the fleet report: ranked "
                         "findings (HoL blocking, gang stragglers, checkpoint "
                         "cadence vs Young-Daly, cache miss storms)")
+    p.add_argument("--validate", action="store_true",
+                   help="cross-check the report against conservation laws "
+                        "(Little's law, busy-time/utilization identities) "
+                        "and the analytic M/G/k queueing band "
+                        "(repro.validate); exit 1 on any failed identity")
     p.add_argument("--spans", metavar="PATH",
                    help="enable the simulator self-span tracer and write its "
                         "chrome trace here ('-' for stdout)")
@@ -240,6 +245,13 @@ def main(argv=None) -> int:
         print()
         print(doctor_rep.table(width=args.width))
 
+    vrep = None
+    if args.validate:
+        from repro.validate.queueing import validate_cluster
+        vrep = validate_cluster(rep)
+        print()
+        print(vrep.render())
+
     outputs = []
     if args.chrome_trace:
         extra: list = lapse.to_chrome_events() if lapse is not None else []
@@ -267,7 +279,8 @@ def main(argv=None) -> int:
                                   else "batched"),
                     "elastic": not args.no_elastic},
             seeds={"seed": args.seed},
-            stage_seconds=timer.stage_seconds, timelapse=lapse)
+            stage_seconds=timer.stage_seconds, timelapse=lapse,
+            extra_metrics=vrep.metrics() if vrep is not None else None)
         outputs.append((args.manifest, man.to_json()))
     for path, payload in outputs:
         if path == "-":
@@ -290,6 +303,10 @@ def main(argv=None) -> int:
                   f"({len(TRACER.records)} spans)", file=sys.stderr)
     if args.self_profile:
         print(timer.render(), file=sys.stderr)
+    if vrep is not None and not vrep.passed:
+        print("VALIDATION FAILED (conservation/queueing cross-checks)",
+              file=sys.stderr)
+        return 1
     return 0
 
 

@@ -63,6 +63,7 @@ from repro.faults.pricing import CheckpointModel
 from repro.faults.processes import DEVICE, LINK, FailureProcess, link_key
 from repro.faults.reroute import gang_dilation
 from repro.obs.metrics import REGISTRY
+from repro.obs.stats import quantile, quantile_sorted
 from repro.obs.trace import TRACER
 from repro.topology.graph import undirected_pair
 
@@ -70,20 +71,17 @@ _ARRIVAL, _FINISH, _FAIL, _REPAIR = 0, 1, 2, 3
 
 
 def percentile(values: Sequence[float], q: float) -> float:
-    """Linear-interpolation percentile (numpy's default), pure python."""
-    return _percentile_sorted(sorted(values), q)
+    """Linear-interpolation percentile (numpy's default), pure python.
+
+    Delegates to the one shared implementation in :mod:`repro.obs.stats`:
+    ``q`` is clamped to [0, 1] and NaN inputs raise ``ValueError`` instead
+    of silently extrapolating or poisoning downstream summaries."""
+    return quantile(values, q)
 
 
 def _percentile_sorted(xs: Sequence[float], q: float) -> float:
     """:func:`percentile` over an ALREADY-sorted sequence (no re-sort)."""
-    if not xs:
-        return 0.0
-    if len(xs) == 1:
-        return xs[0]
-    pos = (len(xs) - 1) * q
-    lo = int(pos)
-    hi = min(lo + 1, len(xs) - 1)
-    return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
+    return quantile_sorted(xs, q)
 
 
 @dataclass
@@ -106,10 +104,25 @@ class JobRecord:
     restores: int = 0             # priced checkpoint restores paid
     lost_work_s: float = 0.0      # run time discarded by failures
     reshapes: int = 0             # elastic gang shrinks
+    #: waiting accrued AFTER the first start: gaps between consecutive
+    #: occupancy slices while the job sat requeued (preemption quantum
+    #: expiries and failure-kill requeues).  Filled by the report pass
+    #: from the job's slice-union, so Little's law over the waiting room
+    #: reconciles against total_queue_delay_s, not just the first wait.
+    requeue_wait_s: float = 0.0
 
     @property
     def queue_delay_s(self) -> float:
+        """FIRST wait only: arrival to the first slice (the legacy
+        definition, kept for golden/report compatibility)."""
         return self.start_s - self.arrival_s
+
+    @property
+    def total_queue_delay_s(self) -> float:
+        """All time this job spent waiting: first wait + every requeue
+        gap.  This — not :attr:`queue_delay_s` — is the W in the
+        Little's-law identity L = lambda * W over the waiting room."""
+        return self.queue_delay_s + self.requeue_wait_s
 
     @property
     def latency_s(self) -> float:
@@ -215,6 +228,19 @@ class ClusterReport:
             return 0.0
         return sum(j.queue_delay_s for j in self.jobs) / len(self.jobs)
 
+    @property
+    def mean_total_queue_delay_s(self) -> float:
+        """Mean of first wait + requeue waits — the queueing-theory W.
+
+        On preemption/failure-free runs this equals
+        :attr:`mean_queue_delay_s`; under time-slicing or faults it is
+        strictly larger (the legacy metric silently dropped every requeue
+        gap, understating waiting by orders of magnitude on quantum
+        runs — the bug the Little's-law cross-check caught)."""
+        if not self.jobs:
+            return 0.0
+        return sum(j.total_queue_delay_s for j in self.jobs) / len(self.jobs)
+
     def latency_percentile(self, q: float) -> float:
         # sort the latency list once and reuse it for every quantile asked
         # of this report (summary() alone asks for three)
@@ -297,6 +323,7 @@ class ClusterReport:
             "recoveries": self.recoveries,
             "gang_reshapes": self.gang_reshapes,
             "mean_queue_delay_s": self.mean_queue_delay_s,
+            "mean_total_queue_delay_s": self.mean_total_queue_delay_s,
             "p50_latency_s": self.latency_percentile(0.50),
             "p95_latency_s": self.latency_percentile(0.95),
             "p99_latency_s": self.latency_percentile(0.99),
@@ -644,6 +671,10 @@ class ClusterSim:
                 # committed; an interrupted restore must be paid again
                 committed, spent_ck, lost = 0, 0.0, 0.0
                 for s in ctx["pre"]:
+                    if s.kind == "setup" and s.t1 > now:
+                        # the class switch never completed: the device is
+                        # NOT warm, so the retry must repay the cold start
+                        slot_of[s.device_id].last_class = None
                     s.t0, s.t1 = min(s.t0, now), min(s.t1, now)
                 for s in ctx["run"]:
                     s.t0 = s.t1 = now
@@ -850,6 +881,11 @@ class ClusterSim:
                         if ctx is not None:
                             kill_gang(ctx, now, failed_ids={key})
                         slot_of[key].free_at = rep_t
+                        # a repaired device comes back COLD: whatever class
+                        # state it held died with it (keeping it "warm"
+                        # skipped the setup tax and biased locality toward
+                        # freshly rebooted devices)
+                        slot_of[key].last_class = None
                     else:
                         link_failures += 1
                         link_iv.setdefault(key, []).append((now, rep_t))
@@ -909,6 +945,24 @@ class ClusterSim:
         for d in fleet:
             d.busy_seconds = busy[d.device_id]
             d.setup_seconds = setup[d.device_id]
+        # requeue waits: a preempted or failure-killed job waits again
+        # between consecutive occupancy slices.  The per-job slice-UNION
+        # gaps (gang slices share spans, so the union collapses them) are
+        # exactly the post-first-start waiting the (+1/-1) queue-depth
+        # export integrates — recorded per job so Little's law over the
+        # waiting room closes against total_queue_delay_s.
+        spans_by_job: Dict[str, List[Tuple[float, float]]] = {}
+        for s in slices:
+            spans_by_job.setdefault(s.job_id, []).append((s.t0, s.t1))
+        for job_id, spans in spans_by_job.items():
+            spans.sort()
+            wait, reach = 0.0, None
+            for t0, t1 in spans:
+                if reach is not None and t0 > reach:
+                    wait += t0 - reach
+                reach = t1 if reach is None else max(reach, t1)
+            if wait > 0.0:
+                records[job_id].requeue_wait_s = wait
         # acceptance invariant RHS, recomputed from the cost model: every
         # run slice is `steps` Engine-simulated step makespans on its
         # device's chip (for gangs: the slowest member's chip, the lockstep

@@ -113,6 +113,8 @@ def to_json(report: ClusterReport, indent: int = None) -> str:
             "device_id": j.device_id, "arrival_s": j.arrival_s,
             "start_s": j.start_s, "finish_s": j.finish_s,
             "service_s": j.service_s, "queue_delay_s": j.queue_delay_s,
+            "requeue_wait_s": j.requeue_wait_s,
+            "total_queue_delay_s": j.total_queue_delay_s,
             "latency_s": j.latency_s, "num_steps": j.num_steps,
             "preemptions": j.preemptions, "cold_starts": j.cold_starts,
             "oversubscribed": j.oversubscribed, "failures": j.failures,

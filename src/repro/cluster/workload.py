@@ -234,6 +234,15 @@ def synthetic_trace(spec: str, **kw) -> Trace:
     generator name) to a generated :class:`Trace`; kwargs pass through."""
     kind = spec.split(":", 1)[1] if ":" in spec else spec
     if kind not in GENERATORS:
+        # the validate layer contributes trace-refit generators
+        # (``alibaba-like``) by registering into GENERATORS on import;
+        # lazy-load it on first miss so the cluster package keeps no
+        # static dependency on repro.validate
+        try:
+            import repro.validate.ingest  # noqa: F401  (self-registers)
+        except ImportError:
+            pass
+    if kind not in GENERATORS:
         raise KeyError(f"unknown synthetic trace {spec!r}; "
                        f"known: {sorted(GENERATORS)}")
     return GENERATORS[kind](name=kind, **kw)

@@ -191,6 +191,38 @@ class StochasticFailures(FailureProcess):
     def has_link_failures(self) -> bool:
         return self.link_mtbf_s is not None
 
+    @classmethod
+    def from_fit(cls, ttf_fit, mttr_s: float = 60.0,
+                 **kw) -> "StochasticFailures":
+        """Build a failure process from a fitted time-to-failure
+        distribution (:class:`repro.validate.fitting.FitResult`).
+
+        Exponential fits map directly; everything else maps onto the
+        Weibull family at *matched mean and SCV* (the two moments the
+        goodput math is sensitive to), via
+        :func:`repro.validate.fitting.weibull_shape_for_scv`.  So a
+        heavy-tailed lognormal or Pareto fit of real failure gaps still
+        yields a runnable MTBF process with the right burstiness.
+        """
+        if ttf_fit.mean <= 0 or not math.isfinite(ttf_fit.mean):
+            raise ValueError(
+                f"fitted TTF mean must be positive and finite, got "
+                f"{ttf_fit.mean} ({ttf_fit.dist}) — refit or fall back "
+                "to an explicit mtbf_s")
+        if ttf_fit.dist == "exponential":
+            return cls(mtbf_s=ttf_fit.mean, mttr_s=mttr_s, dist="exp", **kw)
+        from repro.validate.fitting import weibull_shape_for_scv
+        scv = ttf_fit.scv
+        if not math.isfinite(scv) or scv <= 0:
+            raise ValueError(
+                f"fitted TTF SCV must be positive and finite, got {scv} "
+                f"({ttf_fit.dist}: infinite-variance tail) — refit or "
+                "fall back to an explicit mtbf_s")
+        k = ttf_fit.params[0] if ttf_fit.dist == "weibull" \
+            else weibull_shape_for_scv(scv)
+        return cls(mtbf_s=ttf_fit.mean, mttr_s=mttr_s, dist="weibull",
+                   weibull_k=k, **kw)
+
 
 # ---------------------------------------------------------------------------
 # spec grammar

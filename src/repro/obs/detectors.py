@@ -334,6 +334,35 @@ def detect_cache_miss_storm(report, s, lapse, th: Thresholds,
                "the run was not stage-profiled), not simulated fleet time")
 
 
+@cluster_detector
+def detect_accounting_residual(report, s, lapse, th: Thresholds,
+                               context) -> Optional[Finding]:
+    """Conservation-law drift: Little's law / busy-time / utilization
+    identities (``repro.validate``) disagree with the report.  Unlike
+    every other cluster finding this is a verdict on the SIMULATOR, not
+    the simulated fleet — the identities are exact, so any residual
+    above float noise means the tape and the records tell different
+    stories about the same run."""
+    try:
+        from repro.validate.queueing import conservation_checks
+    except ImportError:                               # pragma: no cover
+        return None
+    bad = [c for c in conservation_checks(
+        report, tol=th.conservation_residual) if not c.ok]
+    if not bad:
+        return None
+    worst = max(bad, key=lambda c: c.residual)
+    return Finding(
+        "accounting-residual",
+        f"{len(bad)} conservation identities violated "
+        f"(worst {worst.name}: residual {worst.residual * 100:.3g}%)",
+        evidence={c.name.replace("-", "_"): c.residual for c in bad},
+        affected=[c.name for c in bad],
+        method="analytic",
+        detail="accounting drift is a simulator bug, not a workload "
+               "effect — rerun with --validate for the full check table")
+
+
 def run_engine_detectors(report, summary, lapse=None,
                          thresholds: Thresholds = DEFAULT_THRESHOLDS
                          ) -> List[Finding]:

@@ -102,11 +102,20 @@ def cluster_manifest(report, config: Dict[str, Any],
                      seeds: Optional[Dict[str, int]] = None,
                      label: str = "",
                      stage_seconds: Optional[Dict[str, float]] = None,
-                     timelapse=None) -> RunManifest:
-    """Manifest for one fleet run (``report`` is a ``ClusterReport``)."""
+                     timelapse=None,
+                     extra_metrics: Optional[Dict[str, float]] = None
+                     ) -> RunManifest:
+    """Manifest for one fleet run (``report`` is a ``ClusterReport``).
+
+    ``extra_metrics`` merges additional numeric series into the metric
+    map — the cluster CLI feeds ``repro.validate`` residuals through it,
+    so manifest diffs and the regression sentinel track conservation
+    drift like any other metric.
+    """
     lapse_doc = timelapse.to_doc() if timelapse is not None else None
     metrics = {k: v for k, v in report.summary().items()
                if isinstance(v, (int, float)) and not isinstance(v, bool)}
+    metrics.update(extra_metrics or {})
     return RunManifest(
         "cluster", label or f"{report.trace_name} x {report.policy}",
         config=dict(config), seeds=dict(seeds or {}), metrics=metrics,

@@ -53,6 +53,11 @@ class Thresholds:
     #: findings recovering less than this fraction of the makespan are
     #: dropped (noise floor for the ranked table)
     min_recoverable_fraction: float = 0.005
+    #: conservation-law residual (Little's law, busy-time/utilization
+    #: identities — ``repro.validate``) above this trips the
+    #: accounting-residual detector; identities are exact, so this band
+    #: only absorbs float noise on long tapes
+    conservation_residual: float = 0.01
 
 
 #: the one instance every renderer / detector reads by default

@@ -1,0 +1,470 @@
+"""repro.validate tests: ingestion, fitting, analytic cross-checks, and the
+hand-computed regressions for the accounting bugs this layer caught.
+
+The three bugs the conservation checks flagged (and this PR fixed):
+
+* **requeue waits dropped** — ``queue_delay_s`` only counted arrival to
+  FIRST start, so preempted jobs' re-queue gaps vanished from Little's
+  law (up to ~50x understatement on time-sliced runs).  Fixed by
+  ``JobRecord.requeue_wait_s`` / ``total_queue_delay_s``.
+* **interrupted cold start leaves the device warm** — a setup slice
+  truncated by a failure still recorded the class switch, so the retry
+  skipped the setup it never finished.
+* **rebooted devices stay warm** — after a repair the device kept
+  ``last_class``, so the next same-class job skipped its cold start.
+
+Every scenario uses TableCostModel + PlannedFailures, so each expected
+number is checkable on paper.
+"""
+import json
+import math
+import os
+import random
+
+import pytest
+
+from repro.cluster import ClusterSim, Fleet, TableCostModel, make_policy
+from repro.cluster.events import percentile
+from repro.cluster.workload import Job, JobClass, Trace, synthetic_trace
+from repro.faults import Outage, PlannedFailures, StochasticFailures
+from repro.obs.stats import quantile, quantile_sorted
+from repro.validate import (alibaba_like_trace, best_fit, erlang_c, fit,
+                            fit_all, load_alibaba, mmk_wq, allen_cunneen_wq,
+                            profile_from_trace, table_cost_model,
+                            validate_cluster, weibull_shape_for_scv)
+from repro.validate.queueing import conservation_checks, queueing_checks
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data", "alibaba_fixture")
+
+CLS = (JobClass("a", "lenet"),)
+COST = {"a": (1.0, 1.0)}
+
+
+def run_cluster(jobs, policy="fifo", devices="1", **kw):
+    trace = Trace("t", list(jobs), CLS)
+    sim = ClusterSim(Fleet.from_spec(devices), TableCostModel(COST),
+                     make_policy(policy), **kw)
+    return sim.run(trace)
+
+
+# ---------------------------------------------------------------------------
+# shared quantile helper (the consolidation satellite)
+# ---------------------------------------------------------------------------
+
+class TestQuantile:
+    def test_interpolation(self):
+        xs = [10.0, 20.0, 30.0, 40.0]
+        assert quantile(xs, 0.5) == 25.0
+        assert quantile(xs, 0.0) == 10.0
+        assert quantile(xs, 1.0) == 40.0
+
+    def test_clamps_out_of_range_q(self):
+        xs = [1.0, 2.0, 3.0]
+        # pre-consolidation: q=1.5 raised IndexError in one copy and
+        # silently extrapolated in another — now both clamp
+        assert quantile(xs, 1.5) == 3.0
+        assert quantile(xs, -0.2) == 1.0
+
+    def test_rejects_nan(self):
+        with pytest.raises(ValueError):
+            quantile([1.0, 2.0], float("nan"))
+        with pytest.raises(ValueError):
+            quantile([1.0, float("nan")], 0.5)
+
+    def test_empty_and_singleton(self):
+        assert quantile([], 0.5) == 0.0
+        assert quantile([7.0], 0.99) == 7.0
+
+    def test_unsorted_input_sorted_once(self):
+        assert quantile([3.0, 1.0, 2.0], 0.5) == 2.0
+        assert quantile_sorted([1.0, 2.0, 3.0], 0.5) == 2.0
+
+    def test_events_percentile_delegates(self):
+        xs = [5.0, 1.0, 3.0]
+        assert percentile(xs, 0.5) == quantile(xs, 0.5)
+        assert percentile(xs, 2.0) == 5.0     # clamped, not IndexError
+
+
+# ---------------------------------------------------------------------------
+# hand-computed accounting regressions
+# ---------------------------------------------------------------------------
+
+class TestRequeueWait:
+    def test_quantum_requeue_gaps_counted(self):
+        """1 device, quantum 1 s, two 2-step jobs of 1 s/step:
+        j0 runs [0,1) [2,3), j1 runs [1,2) [3,4).  j0's requeue gap is
+        [1,2) = 1 s; j1 waits 0.9 s first ([0.1,1)) then [2,3) = 1 s."""
+        rep = run_cluster([Job("j0", "a", 0.0, 2), Job("j1", "a", 0.1, 2)],
+                          quantum_s=1.0)
+        by = {j.job_id: j for j in rep.jobs}
+        assert by["j0"].queue_delay_s == pytest.approx(0.0)
+        assert by["j0"].requeue_wait_s == pytest.approx(1.0)
+        assert by["j0"].total_queue_delay_s == pytest.approx(1.0)
+        assert by["j1"].queue_delay_s == pytest.approx(0.9)
+        assert by["j1"].requeue_wait_s == pytest.approx(1.0)
+        assert by["j1"].total_queue_delay_s == pytest.approx(1.9)
+        assert rep.mean_total_queue_delay_s == pytest.approx(1.45)
+        # the regression this fixes: first-wait-only accounting said 0.45
+        assert rep.mean_queue_delay_s == pytest.approx(0.45)
+
+    def test_littles_law_closes_with_requeue(self):
+        rep = run_cluster([Job(f"j{i}", "a", 0.05 * i, 3) for i in range(6)],
+                          quantum_s=1.0, devices="2")
+        for c in conservation_checks(rep):
+            assert c.ok, c.render()
+
+
+class TestColdStartRegressions:
+    def test_interrupted_setup_repaid(self):
+        """cold_start 1 s; device dies at 0.5 MID-SETUP, repairs at 0.7.
+        The class switch never completed, so the retry pays the FULL
+        setup again: setup [0,0.5) + [0.7,1.7), run [1.7,3.7)."""
+        trace = Trace("t", [Job("j0", "a", 0.0, 2)], CLS)
+        sim = ClusterSim(
+            Fleet.from_spec("1"), TableCostModel(COST), make_policy("fifo"),
+            cold_start_s=1.0,
+            faults=PlannedFailures([Outage("device", "dev0:tpu-v5e",
+                                           0.5, 0.2)]))
+        rep = sim.run(trace)
+        setup = sorted((s.t0, s.t1) for s in rep.slices if s.kind == "setup")
+        assert setup == [(0.0, 0.5), (pytest.approx(0.7),
+                                      pytest.approx(1.7))]
+        assert rep.jobs[0].finish_s == pytest.approx(3.7)
+
+    def test_rebooted_device_is_cold(self):
+        """j0 warm-runs, dies mid-run at 2.5, repair at 3.0: the REBOOTED
+        device must repay the cold start (setup [3,4), rerun [4,6))."""
+        trace = Trace("t", [Job("j0", "a", 0.0, 2)], CLS)
+        sim = ClusterSim(
+            Fleet.from_spec("1"), TableCostModel(COST), make_policy("fifo"),
+            cold_start_s=1.0,
+            faults=PlannedFailures([Outage("device", "dev0:tpu-v5e",
+                                           2.5, 0.5)]))
+        rep = sim.run(trace)
+        setup = sorted((s.t0, s.t1) for s in rep.slices if s.kind == "setup")
+        assert setup == [(0.0, 1.0), (3.0, 4.0)]
+        assert rep.jobs[0].finish_s == pytest.approx(6.0)
+
+
+# ---------------------------------------------------------------------------
+# conservation + queueing checks
+# ---------------------------------------------------------------------------
+
+class TestConservation:
+    @pytest.mark.parametrize("kw", [
+        {},
+        {"quantum_s": 0.8},
+        {"cold_start_s": 0.3},
+        {"quantum_s": 0.7, "cold_start_s": 0.2},
+    ])
+    def test_exact_identities_hold(self, kw):
+        jobs = [Job(f"j{i}", "a", 0.3 * i, 1 + i % 4) for i in range(12)]
+        rep = run_cluster(jobs, devices="2", **kw)
+        for c in conservation_checks(rep):
+            assert c.ok, c.render()
+
+    def test_identities_hold_under_faults(self):
+        trace = synthetic_trace("poisson", n_jobs=30, rate_jobs_per_s=2.0,
+                                seed=3)
+        sim = ClusterSim(Fleet.from_spec("4"),
+                         _synthetic_cost(trace), make_policy("sjf"),
+                         faults=StochasticFailures(mtbf_s=20.0, mttr_s=4.0,
+                                                   seed=1),
+                         cold_start_s=0.2)
+        rep = sim.run(trace)
+        for c in conservation_checks(rep):
+            assert c.ok, c.render()
+
+    def test_corrupted_records_are_flagged(self):
+        rep = run_cluster([Job(f"j{i}", "a", 0.2 * i, 2) for i in range(8)],
+                          quantum_s=1.0, devices="2")
+        rep.jobs[0].requeue_wait_s = 0.0       # simulate the old bug
+        rep.jobs[0].start_s += 5.0             # and some record drift
+        bad = [c for c in conservation_checks(rep) if not c.ok]
+        assert any(c.name.startswith("littles-law") for c in bad)
+
+
+class TestAnalytic:
+    def test_erlang_c_mm1(self):
+        # M/M/1: P(wait) = rho, Wq = rho / (mu - lambda)
+        lam, mu = 0.5, 1.0
+        assert erlang_c(1, lam / mu) == pytest.approx(0.5)
+        assert mmk_wq(lam, 1.0 / mu, 1) == pytest.approx(0.5 / (mu - lam))
+
+    def test_erlang_c_mm2(self):
+        # M/M/2 closed form: P(wait) = 2 rho^2 / (1 + rho), rho = a/2
+        a = 1.2
+        rho = a / 2
+        assert erlang_c(2, a) == pytest.approx(2 * rho * rho / (1 + rho))
+
+    def test_allen_cunneen_reduces_to_mmk(self):
+        w = mmk_wq(0.8, 1.0, 2)
+        assert allen_cunneen_wq(0.8, 1.0, 1.0, 2, 1.0) == pytest.approx(w)
+        assert allen_cunneen_wq(0.8, 1.0, 0.0, 2, 0.0) \
+            == pytest.approx(0.0, abs=1e-12)
+
+    def test_overload_is_infinite(self):
+        assert mmk_wq(3.0, 1.0, 2) == math.inf
+
+    def test_mgk_matches_simulated_mm1(self):
+        """Poisson arrivals + deterministic service on one device: the
+        simulated mean wait must land inside the M/G/1 band."""
+        rng = random.Random(7)
+        t, jobs = 0.0, []
+        for i in range(3000):
+            t += rng.expovariate(2.0)
+            jobs.append(Job(f"j{i:04d}", "a", t, 1))
+        # deterministic service: 1 step * 0.25 s/step, rho = 2.0*0.25 = 0.5
+        trace = Trace("mm1", jobs, CLS)
+        sim = ClusterSim(Fleet.from_spec("1"),
+                         TableCostModel({"a": (0.25, 1.0)}),
+                         make_policy("fifo"))
+        rep = sim.run(trace)
+        checks = queueing_checks(rep)
+        assert len(checks) == 1 and not checks[0].gated
+        assert checks[0].ok, checks[0].render()
+
+
+# ---------------------------------------------------------------------------
+# fitting
+# ---------------------------------------------------------------------------
+
+class TestFitting:
+    def test_recovers_exponential(self):
+        rng = random.Random(0)
+        xs = [rng.expovariate(0.5) for _ in range(600)]
+        f = fit(xs, "exponential")
+        assert f.params[0] == pytest.approx(0.5, rel=0.1)
+        assert f.ks_pvalue > 0.01
+
+    def test_recovers_lognormal(self):
+        rng = random.Random(1)
+        xs = [rng.lognormvariate(1.0, 0.5) for _ in range(600)]
+        f = fit(xs, "lognormal")
+        assert f.params[0] == pytest.approx(1.0, abs=0.1)
+        assert f.params[1] == pytest.approx(0.5, rel=0.15)
+
+    def test_best_fit_picks_the_generator(self):
+        rng = random.Random(2)
+        xs = [rng.weibullvariate(2.0, 0.7) for _ in range(800)]
+        f = best_fit(xs)
+        # exp is a weibull special case; the heavy k=0.7 shape must win
+        assert f.dist == "weibull"
+        assert f.params[0] == pytest.approx(0.7, rel=0.15)
+
+    def test_deterministic(self):
+        rng = random.Random(3)
+        xs = [rng.lognormvariate(0.0, 1.0) for _ in range(200)]
+        a, b = fit_all(xs), fit_all(list(xs))
+        assert set(a) == set(b)
+        for k in a:
+            assert a[k].params == b[k].params
+            assert a[k].ks_stat == b[k].ks_stat
+
+    def test_too_few_samples(self):
+        with pytest.raises(ValueError):
+            fit([1.0, 2.0], "exponential")
+
+    def test_weibull_shape_for_scv_inverts(self):
+        for k in (0.6, 1.0, 1.7, 3.0):
+            scv = (math.gamma(1 + 2 / k) / math.gamma(1 + 1 / k) ** 2) - 1
+            assert weibull_shape_for_scv(scv) == pytest.approx(k, rel=1e-3)
+
+    def test_from_fit_maps_onto_failure_process(self):
+        rng = random.Random(4)
+        exp_fit = fit([rng.expovariate(1 / 600) for _ in range(300)],
+                      "exponential")
+        p = StochasticFailures.from_fit(exp_fit, mttr_s=30.0)
+        assert p.dist == "exp"
+        assert p.mtbf_s == pytest.approx(600, rel=0.2)
+
+        ln_fit = fit([rng.lognormvariate(6.0, 1.0) for _ in range(300)],
+                     "lognormal")
+        p2 = StochasticFailures.from_fit(ln_fit, mttr_s=30.0)
+        assert p2.dist == "weibull"
+        # weibull at the mapped shape matches the fit's mean and SCV
+        k = p2.weibull_k
+        scv = (math.gamma(1 + 2 / k) / math.gamma(1 + 1 / k) ** 2) - 1
+        assert scv == pytest.approx(ln_fit.scv, rel=1e-3)
+        assert p2.mtbf_s == pytest.approx(ln_fit.mean)
+
+    def test_from_fit_rejects_infinite_variance(self):
+        rng = random.Random(5)
+        par = fit([rng.paretovariate(0.8) for _ in range(300)], "pareto")
+        with pytest.raises(ValueError):
+            StochasticFailures.from_fit(par)
+
+
+# ---------------------------------------------------------------------------
+# ingestion + the alibaba fixture
+# ---------------------------------------------------------------------------
+
+class TestIngest:
+    def test_fixture_loads(self):
+        trace, stats = load_alibaba(FIXTURE)
+        assert stats.jobs_kept == 180
+        assert stats.dropped_no_tasks == 1
+        assert stats.dropped_bad_times == 1
+        assert stats.non_monotone_rows > 0      # the file is NOT sorted
+        assert trace.jobs[0].arrival_s == 0.0   # normalized to t=0
+        assert set(stats.classes) == {"v100-g1", "v100-g2"}
+        gangs = [j for j in trace.jobs if j.num_devices == 2]
+        assert len(gangs) == 20
+
+    def test_arrivals_sorted_despite_shuffled_rows(self):
+        """The shuffled-arrival regression: rows out of submit order in
+        the CSV (and in any hand-built job list) must come out sorted."""
+        trace, _ = load_alibaba(FIXTURE)
+        arr = [j.arrival_s for j in trace.jobs]
+        assert arr == sorted(arr)
+        jobs = [Job("b", "a", 5.0, 1), Job("a", "a", 1.0, 1),
+                Job("c", "a", 1.0, 1)]
+        t = Trace("shuffled", jobs, CLS)
+        assert [j.job_id for j in t.jobs] == ["a", "c", "b"]
+
+    def test_replay_preserves_durations(self):
+        """TableCostModel replay: simulated service == trace durations
+        (to step-rounding), the property the cross-checks assume."""
+        trace, _ = load_alibaba(FIXTURE, max_jobs=40)
+        cost = table_cost_model(trace)
+        for j in trace.jobs[:10]:
+            sps = trace.meta[f"step_s:{j.job_class}"]
+            hw = Fleet.from_spec("1").slots[0].hw
+            assert cost.report(j.job_class, hw).total_seconds \
+                == pytest.approx(sps)
+
+    def test_table_cost_model_requires_meta(self):
+        with pytest.raises(KeyError):
+            table_cost_model(Trace("bare", [Job("j", "a", 0.0, 1)], CLS))
+
+    def test_max_jobs_cap(self):
+        trace, stats = load_alibaba(FIXTURE, max_jobs=25)
+        assert len(trace.jobs) == 25
+
+
+class TestRoundTrip:
+    """ingest -> refit -> generate preserves rate and footprint mix."""
+
+    def test_rate_and_mix_preserved(self):
+        trace, _ = load_alibaba(FIXTURE)
+        prof = profile_from_trace(trace)
+        n = 600
+        for seed in (0, 1, 2):
+            gen = alibaba_like_trace(
+                n_jobs=n, rate_jobs_per_s=prof.rate_jobs_per_s, seed=seed,
+                profile=prof)
+            span = gen.jobs[-1].arrival_s - gen.jobs[0].arrival_s
+            rate = (n - 1) / span
+            assert rate == pytest.approx(prof.rate_jobs_per_s, rel=0.25)
+            gang_frac = sum(1 for j in gen.jobs if j.num_devices > 1) / n
+            want = sum(c.weight for c in prof.classes if c.num_devices > 1)
+            assert gang_frac == pytest.approx(want, abs=0.05)
+
+    def test_generator_deterministic_and_seed_sensitive(self):
+        a = alibaba_like_trace(n_jobs=50, seed=7)
+        b = alibaba_like_trace(n_jobs=50, seed=7)
+        c = alibaba_like_trace(n_jobs=50, seed=8)
+        assert a.to_json() == b.to_json()
+        assert a.to_json() != c.to_json()
+
+    def test_registered_as_synthetic_generator(self):
+        t = synthetic_trace("synthetic:alibaba-like", n_jobs=10,
+                            rate_jobs_per_s=2.0, seed=1)
+        assert len(t.jobs) == 10
+        assert any(k.startswith("step_s:") for k in t.meta)
+
+    def test_rate_rescales_without_reshuffling(self):
+        slow = alibaba_like_trace(n_jobs=30, rate_jobs_per_s=0.5, seed=3)
+        fast = alibaba_like_trace(n_jobs=30, rate_jobs_per_s=5.0, seed=3)
+        assert [(j.job_class, j.num_steps) for j in slow.jobs] \
+            == [(j.job_class, j.num_steps) for j in fast.jobs]
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    class TestRoundTripProperty:
+        @given(seed=st.integers(0, 10_000),
+               rate=st.floats(0.2, 5.0))
+        @settings(max_examples=25, deadline=None)
+        def test_any_seed_preserves_population(self, seed, rate):
+            base = alibaba_like_trace(n_jobs=40, rate_jobs_per_s=1.0,
+                                      seed=seed)
+            scaled = alibaba_like_trace(n_jobs=40, rate_jobs_per_s=rate,
+                                        seed=seed)
+            assert [(j.job_class, j.num_steps) for j in base.jobs] \
+                == [(j.job_class, j.num_steps) for j in scaled.jobs]
+
+
+# ---------------------------------------------------------------------------
+# the acceptance run
+# ---------------------------------------------------------------------------
+
+class TestAcceptance:
+    def test_fixture_passes_under_sjf(self):
+        """ISSUE acceptance: Little's-law residual < 1% AND M/G/k within
+        25% at utilization <= 0.7 on the committed fixture under SJF."""
+        trace, _ = load_alibaba(FIXTURE)
+        sim = ClusterSim(Fleet.from_spec("4"), table_cost_model(trace),
+                         make_policy("sjf"))
+        rep = sim.run(trace)
+        assert rep.utilization <= 0.7
+        vrep = validate_cluster(rep)
+        by = {c.name: c for c in vrep.checks}
+        assert by["littles-law-system"].residual < 0.01
+        assert by["littles-law-queue"].residual < 0.01
+        mgk = by["mgk-queueing-delay"]
+        assert not mgk.gated and mgk.residual < 0.25, mgk.render()
+        assert vrep.passed, vrep.render()
+
+    def test_cli_exit_zero(self, tmp_path, capsys):
+        from repro.validate.__main__ import main
+        out = tmp_path / "v.json"
+        code = main(["--trace", FIXTURE, "--policy", "sjf",
+                     "--json", str(out)])
+        assert code == 0
+        doc = json.loads(out.read_text())
+        assert doc["passed"] is True
+        assert doc["worst_residual"] < 0.25
+
+    def test_cluster_cli_validate_flag(self, capsys):
+        from repro.cluster.__main__ import main
+        code = main(["--trace", "synthetic:poisson", "--jobs", "20",
+                     "--cost", "synthetic", "--devices", "2", "--validate"])
+        assert code == 0
+        assert "validation:" in capsys.readouterr().out
+
+    def test_detector_silent_on_healthy_run(self):
+        from repro.obs.detectors import detect_accounting_residual
+        from repro.obs.thresholds import DEFAULT_THRESHOLDS
+        rep = run_cluster([Job(f"j{i}", "a", 0.5 * i, 2) for i in range(6)],
+                          quantum_s=1.0)
+        assert detect_accounting_residual(
+            rep, rep.summary(), None, DEFAULT_THRESHOLDS, None) is None
+        rep.jobs[0].start_s += 50.0             # corrupt the records
+        f = detect_accounting_residual(
+            rep, rep.summary(), None, DEFAULT_THRESHOLDS, None)
+        assert f is not None and f.slug == "accounting-residual"
+
+    def test_validation_report_findings_and_metrics(self):
+        rep = run_cluster([Job(f"j{i}", "a", 0.5 * i, 2) for i in range(6)])
+        vrep = validate_cluster(rep)
+        assert vrep.passed
+        m = vrep.metrics()
+        assert "validate_worst_residual" in m
+        assert m["validate_failed_checks"] == 0.0
+        rep.jobs[0].start_s += 50.0
+        bad = validate_cluster(rep)
+        assert not bad.passed
+        findings = bad.to_findings()
+        assert findings and all(f.slug.startswith("validate-")
+                                for f in findings)
+
+
+def _synthetic_cost(trace):
+    from repro.cluster.devices import cost_model_for
+    return cost_model_for(trace, "synthetic")
