@@ -252,18 +252,21 @@ def ks_statistic(sorted_xs: Sequence[float],
 
 
 def chi_square(sorted_xs: Sequence[float], cdf: Callable[[float], float],
-               n_params: int, max_bins: int = 16
-               ) -> Tuple[float, float, int]:
+               n_params: int, max_bins: int = 16,
+               min_expected: float = 5.0) -> Tuple[float, float, int]:
     """Chi-square GOF over equal-count bins (edges at sample quantiles).
 
     Expected counts come from the fitted CDF mass between the edges, so
-    only the *forward* CDF is needed; dof = bins - 1 - n_params.
-    Returns ``(stat, pvalue, dof)``.
+    only the *forward* CDF is needed.  Adjacent bins are merged until
+    every bin carries at least ``min_expected`` expected counts (the
+    classical Cochran rule) — on heavily tied / discrete-ish samples the
+    equal-count edges collapse, and an unmerged near-zero-mass bin with a
+    nonzero observed count would blow the statistic up to infinity;
+    dof = merged_bins - 1 - n_params.  Returns ``(stat, pvalue, dof)``.
     """
     n = len(sorted_xs)
     bins = max(min(max_bins, n // 5), n_params + 2)
-    dof = bins - 1 - n_params
-    if dof <= 0 or n < bins:
+    if bins - 1 - n_params <= 0 or n < bins:
         return 0.0, 1.0, 0
     # equal-count edges: the b-th edge is the (b*n/bins)-th order statistic
     edges = [sorted_xs[min(int(round(b * n / bins)), n - 1)]
@@ -274,13 +277,32 @@ def chi_square(sorted_xs: Sequence[float], cdf: Callable[[float], float],
         while b < bins - 1 and x > edges[b]:
             b += 1
         observed[b] += 1
-    stat = 0.0
+    expected = []
     prev_f = 0.0
     for i in range(bins):
         hi_f = cdf(edges[i]) if i < bins - 1 else 1.0
-        expected = n * max(hi_f - prev_f, 1e-12)
-        stat += (observed[i] - expected) ** 2 / expected
+        expected.append(n * max(hi_f - prev_f, 0.0))
         prev_f = hi_f
+    # left-to-right merge: accumulate until the expected count clears the
+    # floor; a trailing remainder folds into the last emitted bin
+    merged: List[Tuple[float, float]] = []
+    acc_o = acc_e = 0.0
+    for o, e in zip(observed, expected):
+        acc_o += o
+        acc_e += e
+        if acc_e >= min_expected:
+            merged.append((acc_o, acc_e))
+            acc_o = acc_e = 0.0
+    if acc_o or acc_e:
+        if merged:
+            last_o, last_e = merged[-1]
+            merged[-1] = (last_o + acc_o, last_e + acc_e)
+        else:
+            merged.append((acc_o, acc_e))
+    dof = len(merged) - 1 - n_params
+    if dof <= 0:
+        return 0.0, 1.0, 0
+    stat = sum((o - e) ** 2 / e for o, e in merged)
     return stat, chi2_pvalue(stat, dof), dof
 
 

@@ -389,7 +389,7 @@ def queueing_checks(report, tol: float = QUEUEING_TOL,
     if gang_frac > QUEUEING_MAX_GANG_FRACTION:
         return [Check("mgk-queueing-delay", 0.0, 0.0, tol, gated=True,
                       detail=f"{gang_frac * 100:.0f}% gang jobs "
-                             f"({gang_jobs} slices) — M/G/k assumes "
+                             f"({len(gang_size)} of {n}) — M/G/k assumes "
                              "single-server jobs")]
     if (ca2 + cs2) / 2 > QUEUEING_MAX_VARIABILITY:
         return [Check("mgk-queueing-delay", 0.0, 0.0, tol, gated=True,

@@ -32,6 +32,7 @@ from repro.validate import (alibaba_like_trace, best_fit, erlang_c, fit,
                             fit_all, load_alibaba, mmk_wq, allen_cunneen_wq,
                             profile_from_trace, table_cost_model,
                             validate_cluster, weibull_shape_for_scv)
+from repro.validate.fitting import chi_square
 from repro.validate.queueing import conservation_checks, queueing_checks
 
 FIXTURE = os.path.join(os.path.dirname(__file__), "data", "alibaba_fixture")
@@ -224,6 +225,22 @@ class TestAnalytic:
         assert len(checks) == 1 and not checks[0].gated
         assert checks[0].ok, checks[0].render()
 
+    def test_gang_heavy_trace_gates_not_crashes(self):
+        """Regression: the gang-fraction gate referenced an undefined
+        variable in its detail string, so any gang-heavy report raised
+        NameError instead of gating."""
+        gang_cls = (JobClass("g", "lenet", num_devices=2),)
+        jobs = [Job(f"g{i:03d}", "g", 10.0 * i, 1, num_devices=2)
+                for i in range(40)]
+        trace = Trace("gangs", jobs, gang_cls)
+        sim = ClusterSim(Fleet.from_spec("4"),
+                         TableCostModel({"g": (0.25, 1.0)}),
+                         make_policy("fifo"))
+        rep = sim.run(trace)
+        checks = queueing_checks(rep)
+        assert len(checks) == 1 and checks[0].gated
+        assert "gang" in checks[0].detail
+
 
 # ---------------------------------------------------------------------------
 # fitting
@@ -264,6 +281,26 @@ class TestFitting:
     def test_too_few_samples(self):
         with pytest.raises(ValueError):
             fit([1.0, 2.0], "exponential")
+
+    def test_chi_square_merges_low_expected_bins(self):
+        """Regression: heavily tied samples collapse the equal-count
+        edges, and a near-zero-expected bin with nonzero observed count
+        used to blow the statistic up (p-value pinned at 0)."""
+        xs = sorted([1.0] * 120 + [2.0] * 60 + [4.0] * 20)
+        f = fit(xs, "exponential")
+        stat, pvalue, dof = f.chi2_stat, f.chi2_pvalue, f.chi2_dof
+        # exponential is a bad model for a 3-atom sample, but the stat
+        # must stay finite and bounded — not 1e12-scale from a 1e-12 clamp
+        assert math.isfinite(stat) and stat < 1e4
+        assert pvalue >= 0.0
+        # merged dof never exceeds the unmerged bin count's dof
+        assert 0 < dof <= 16 - 1 - 1
+        # and on a continuous well-fit sample merging is a no-op
+        rng = random.Random(11)
+        smooth = [rng.expovariate(1.0) for _ in range(500)]
+        _, p_smooth, _ = chi_square(sorted(smooth),
+                                    lambda x: 1.0 - math.exp(-x), 1)
+        assert p_smooth > 0.01
 
     def test_weibull_shape_for_scv_inverts(self):
         for k in (0.6, 1.0, 1.7, 3.0):
